@@ -1,0 +1,139 @@
+"""Benchmarks reproducing each figure/table of the paper from the
+simulator. Each function returns a list of (name, value, unit) rows and is
+invoked by benchmarks.run."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import modes, retry
+from repro.ssdsim import engine, geometry, state as st, workload
+
+
+def _force_mode(s, cfg, mode):
+    """Re-type all data blocks to ``mode`` (motivation experiments read a
+    device fully programmed in one mode). Data is laid out densely, so any
+    slot beyond pages_per_block(mode) is remapped into extra blocks."""
+    ppb = int(geometry.pages_per_block(cfg)[mode])
+    spb = cfg.slots_per_block
+    L = cfg.n_logical
+    lpn = jnp.arange(L, dtype=jnp.int32)
+    blk = lpn // ppb
+    off = lpn % ppb
+    slot = blk * spb + off
+    n_blocks_used = int(-(-L // ppb))
+    assert n_blocks_used <= cfg.n_blocks, "working set too big for this mode"
+    p2l = jnp.full((cfg.n_slots,), -1, jnp.int32).at[slot].set(lpn)
+    bidx = jnp.arange(cfg.n_blocks)
+    used = bidx < n_blocks_used
+    return s._replace(
+        l2p=slot,
+        p2l=p2l,
+        block_mode=jnp.full((cfg.n_blocks,), mode, jnp.int32),
+        block_state=jnp.where(used, st.FULL, st.FREE).astype(jnp.int32),
+        block_next=jnp.where(used, ppb, 0).astype(jnp.int32),
+        block_valid=jnp.where(used, ppb, 0).astype(jnp.int32),
+    )
+
+
+def fig2_mode_read_perf(n_requests=60_000):
+    """Fig. 2: random/seq read performance of SLC vs TLC vs QLC devices."""
+    rows = []
+    byte_per_req = 16 * 1024
+    for mode in (modes.SLC, modes.TLC, modes.QLC):
+        for kind in ("rand", "seq"):
+            cfg = geometry.SimConfig(policy=geometry.BASELINE, initial_pe=50,
+                                     device_age_h=1.0, n_logical=131_072)
+            tr = (workload.uniform_read_trace(cfg, n_requests, seed=1)
+                  if kind == "rand" else workload.seq_read_trace(cfg, n_requests))
+            s0 = st.init_state(cfg)
+            s0 = _force_mode(s0, cfg, mode)
+            import jax
+            from jax import lax
+
+            def body(s, x):
+                return engine.step_chunk(s, x, cfg, False)
+
+            s, _ = jax.jit(lambda s, l, o: lax.scan(body, s, (l, o)))(
+                s0, jnp.asarray(tr["lpn"]), jnp.asarray(tr["op"]))
+            m = engine.summarize(s, cfg)
+            bw = m["iops"] * byte_per_req / 1e6
+            rows.append((f"fig2/{modes.MODE_NAMES[mode]}/{kind}_read", bw, "MB/s"))
+    # degradation headline (paper: QLC ~63.6% below SLC on seq 128K)
+    slc = [r for r in rows if "SLC/seq" in r[0]][0][1]
+    qlc = [r for r in rows if "QLC/seq" in r[0]][0][1]
+    rows.append(("fig2/qlc_vs_slc_seq_degradation", 100 * (1 - qlc / slc), "%"))
+    return rows
+
+
+def fig3_4_retry_impact():
+    """Figs. 3/4: bandwidth vs retry count for TLC and QLC (16KB reads)."""
+    rows = []
+    for mode, name in ((modes.TLC, "fig3/TLC"), (modes.QLC, "fig4/QLC")):
+        base = float(retry.read_latency_us(mode, 0))
+        for n in (0, 1, 2, 4, 6, 10, 16):
+            lat = float(retry.read_latency_us(mode, n))
+            rows.append((f"{name}/retry{n}_bw_drop", 100 * (1 - base / lat), "%"))
+    return rows
+
+
+def fig5_6_retry_distribution(n_pages=20_000):
+    """Figs. 5/6: per-stage retry distributions under workload stress."""
+    rows = []
+    pages = jnp.arange(n_pages)
+    rs = np.random.RandomState(0)
+    for mode, nm in ((modes.TLC, "fig5/TLC"), (modes.QLC, "fig6/QLC")):
+        for stage, (lo, hi) in (("young", (0, 333)), ("middle", (334, 666)),
+                                ("old", (667, 1000))):
+            cyc = rs.uniform(lo, hi, n_pages)
+            n = np.asarray(retry.page_retries(mode, cyc, 100.0, 2000.0, pages))
+            rows.append((f"{nm}/{stage}/median", float(np.median(n)), "retries"))
+            rows.append((f"{nm}/{stage}/p95", float(np.percentile(n, 95)), "retries"))
+            rows.append((f"{nm}/{stage}/max_share", 100 * float(np.mean(n == n.max())), "%"))
+    return rows
+
+
+def fig13_16_policy_comparison(n_requests=200_000, thetas=(1.2, 1.5), threads=(4, 1)):
+    """Figs. 13-16: IOPS + capacity change, 3 policies x 3 stages x zipf x
+    threads. The paper's headline claims live here."""
+    rows = []
+    for th in threads:
+        for theta in thetas:
+            for pe, stage in ((166, "young"), (500, "middle"), (833, "old")):
+                res = {}
+                for pol in (geometry.BASELINE, geometry.HOTNESS, geometry.RARO):
+                    cfg = geometry.SimConfig(policy=pol, initial_pe=pe, device_age_h=24.0)
+                    tr = workload.zipf_read_trace(cfg, n_requests, theta, seed=1)
+                    s, _ = engine.run(cfg, tr)
+                    res[pol] = engine.summarize(s, cfg, threads=th)
+                b, h, r = res[geometry.BASELINE], res[geometry.HOTNESS], res[geometry.RARO]
+                tag = f"fig13-16/t{th}/zipf{theta}/{stage}"
+                rows += [
+                    (f"{tag}/raro_vs_base_iops", r["iops"] / b["iops"], "x"),
+                    (f"{tag}/raro_vs_hotness_iops", r["iops"] / h["iops"], "x"),
+                    (f"{tag}/hotness_cap_loss", h["capacity_loss_gib"] * 1024, "MiB"),
+                    (f"{tag}/raro_cap_loss", r["capacity_loss_gib"] * 1024, "MiB"),
+                    (f"{tag}/cap_loss_saving",
+                     100 * (1 - r["capacity_loss_gib"] / max(h["capacity_loss_gib"], 1e-9)), "%"),
+                ]
+    return rows
+
+
+def fig17_18_sensitivity(n_requests=120_000, theta=1.2):
+    """Figs. 17/18: R2 threshold sweep per wear stage."""
+    rows = []
+    sweeps = {166: (4, 5, 7, 9), 500: (5, 7, 9, 12), 833: (9, 11, 13, 16)}
+    for pe, r2s in sweeps.items():
+        stage = modes.STAGE_NAMES[int(modes.stage_of(pe))]
+        for r2 in r2s:
+            cfg = geometry.SimConfig(policy=geometry.RARO, initial_pe=pe,
+                                     device_age_h=24.0, r2_override=r2)
+            tr = workload.zipf_read_trace(cfg, n_requests, theta, seed=1)
+            s, _ = engine.run(cfg, tr)
+            m = engine.summarize(s, cfg)
+            rows.append((f"fig17/{stage}/R2={r2}/iops", m["iops"], "IOPS"))
+            rows.append((f"fig18/{stage}/R2={r2}/cap_loss",
+                         m["capacity_loss_gib"] * 1024, "MiB"))
+    return rows

@@ -1,0 +1,305 @@
+"""Roofline analysis per (arch x shape x mesh) cell.
+
+Three terms, all in seconds per step (TPU v5e constants):
+
+  compute    = HLO_FLOPs            / (chips x 197e12 FLOP/s bf16)
+  memory     = HBM_traffic_bytes    / (chips x 819e9  B/s)
+  collective = wire_bytes_per_chip  / (50e9 B/s per ICI link)
+
+FLOPs/HBM-traffic come from the ANALYTIC per-layer model below (XLA's CPU
+cost_analysis counts while-loop bodies ONCE, so compiled totals undercount
+scanned layers; tests/test_roofline.py validates the analytic model against
+the compiled number on 1-layer variants). Collective payloads come from the
+compiled post-SPMD HLO recorded by the dry-run (bytes_once + n_layers x
+bytes_looped), with wire factors: all-reduce 2x payload, others 1x.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh single_pod_16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from dataclasses import dataclass
+from pathlib import Path
+
+from repro.configs import ARCHS, SHAPES
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.layers import padded_vocab
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/chip
+LINK_BW = 50e9  # B/s/link ICI
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def _mm(m, k, n):
+    return 2.0 * m * k * n
+
+
+@dataclass
+class Flops:
+    layers: float = 0.0  # all sequence-mixer + ffn layers, fwd
+    head: float = 0.0  # embed/logits, fwd
+    attn_ctx: float = 0.0  # part of `layers` that is attention-vs-context
+
+
+def _attn_flops(cfg: ModelConfig, T: float, ctx: float, causal_half: bool) -> float:
+    h, dh = cfg.n_heads, cfg.head_dim
+    f = 2 * _mm(T, ctx, 1) * h * dh  # scores + PV (each 2*T*ctx*dh per head)
+    if cfg.window:
+        f = min(f, 2 * _mm(T, min(ctx, cfg.window), 1) * h * dh)
+    return f * (0.5 if causal_half else 1.0)
+
+
+def _dense_layer(cfg: ModelConfig, T: float, ctx: float, causal_half=True) -> float:
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    f = _mm(T, d, h * dh) + 2 * _mm(T, d, hk * dh) + _mm(T, h * dh, d)  # qkvo
+    f += _attn_flops(cfg, T, ctx, causal_half)
+    if cfg.d_ff:
+        f += 3 * _mm(T, d, cfg.d_ff)
+    return f
+
+
+def _mla_layer_attn(cfg: ModelConfig, T: float, ctx: float, causal_half=True) -> float:
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    ql, kl = cfg.q_lora_rank, cfg.kv_lora_rank
+    f = _mm(T, d, ql) + _mm(T, ql, h * (dn + dr))  # q path
+    f += _mm(T, d, kl + dr) + _mm(T, kl, h * (dn + dv))  # kv path
+    f += 2 * _mm(T, ctx, 1) * h * (dn + dr + dv) / 2 * (1 if not causal_half else 0.5) * 2
+    f += _mm(T, h * dv, d)
+    return f
+
+
+def _moe_ffn(cfg: ModelConfig, T: float) -> float:
+    d = cfg.d_model
+    f = _mm(T, d, cfg.n_experts)  # router
+    f += 3 * _mm(T * cfg.top_k * cfg.capacity_factor, d, cfg.moe_d_ff)
+    if cfg.n_shared_experts:
+        f += 3 * _mm(T, d, cfg.moe_d_ff * cfg.n_shared_experts)
+    return f
+
+
+def _ssm_layer(cfg: ModelConfig, T: float) -> float:
+    d = cfg.d_model
+    di = cfg.expand * d
+    if cfg.ssm_kind == "xlstm":
+        h = cfg.n_heads
+        dh = di // h
+        f = _mm(T, d, 2 * di) + 3 * _mm(T, di, di) + _mm(T, di, d)
+        f += T * h * (4 * dh * dh)  # outer product + 2 matvecs per step
+        return f
+    # mamba2
+    n = cfg.d_state
+    hs = max(di // 64, 1)
+    p = di // hs
+    f = _mm(T, d, 2 * di + 2 * n + hs) + _mm(T, di, d)
+    f += T * hs * p * n * 6  # decay+outer+contract
+    return f
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Analytic FLOPs for one step of this cell (global, fwd/bwd folded)."""
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    T = B * S if kind != "decode" else B
+    ctx = S
+    causal_half = kind != "decode"
+    vp = padded_vocab(cfg.vocab)
+
+    if cfg.family in ("dense", "vlm"):
+        per_layer = _dense_layer(cfg, T, ctx, causal_half)
+        layers = per_layer * cfg.n_layers
+    elif cfg.family == "moe":
+        attn = (_mla_layer_attn if cfg.mla else
+                lambda c, t, x, ch=causal_half: _dense_layer(
+                    c.with_(d_ff=0), t, x, ch))(cfg, T, ctx)
+        moe_layers = cfg.n_layers - cfg.first_k_dense
+        layers = (attn + _moe_ffn(cfg, T)) * moe_layers
+        if cfg.first_k_dense:
+            layers += (attn + 3 * _mm(T, cfg.d_model, cfg.d_ff)) * cfg.first_k_dense
+        if cfg.mtp_depth and kind == "train":
+            layers += _dense_layer(cfg, T, ctx, causal_half) + _mm(T, 2 * cfg.d_model, cfg.d_model)
+    elif cfg.family == "encdec":
+        enc_T = B * cfg.enc_len
+        enc = (0.0 if kind == "decode" else
+               _dense_layer(cfg, enc_T, cfg.enc_len, causal_half=False) * cfg.n_enc_layers)
+        dec_self = _dense_layer(cfg, T, ctx, causal_half)
+        dec_cross = (_mm(T, cfg.d_model, cfg.n_heads * cfg.head_dim) * 2
+                     + _attn_flops(cfg, T, cfg.enc_len, False))
+        layers = enc + (dec_self + dec_cross) * cfg.n_layers
+    elif cfg.family == "ssm":
+        layers = _ssm_layer(cfg, T) * cfg.n_layers
+    else:  # hybrid
+        layers = _ssm_layer(cfg, T) * cfg.n_layers
+        n_apps = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+        layers += (_dense_layer(cfg, T, ctx, causal_half)) * n_apps
+
+    head = _mm(T, cfg.d_model, vp)
+
+    if kind == "train":
+        mult_layers = 4.0 if cfg.remat else 3.0  # fwd + 2x bwd (+ remat fwd)
+        total = layers * mult_layers + head * 3.0
+    else:
+        total = layers + head
+    return {"layers_fwd": layers, "head_fwd": head, "total": total}
+
+
+def model_flops_6nd(cfg: ModelConfig, shape: ShapeConfig, param_bytes: int) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE), D = tokens/step."""
+    n_params = param_bytes / 2  # bf16
+    if cfg.n_experts:
+        # active fraction of expert params + everything else
+        d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+        expert_p = 3 * d * f * e * (cfg.n_layers - cfg.first_k_dense)
+        active = n_params - expert_p + expert_p * cfg.top_k / e
+        n_params = active
+    toks = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 3 if shape.kind == "train" else 1  # 6ND counts fwd+bwd; inference 2ND
+    return 2.0 * n_params * toks * mult
+
+
+def hbm_traffic_per_chip(cfg: ModelConfig, shape: ShapeConfig, rec: dict,
+                         chips: int, tp: int = 16) -> float:
+    """Per-chip per-step HBM bytes (documented model).
+
+    Params are model-sharded only (tp-way): every data-parallel replica
+    streams params/tp from its own HBM — so the per-chip param term is
+    params/tp, NOT params/chips. Activations/logits/KV shard over all
+    chips; a KV cache whose heads/seq cannot use the model axis is
+    replicated across it (the seq_shard §Perf iteration removes that).
+
+      train  : (fwd + bwd + remat-fwd) param reads + grad write + 2x f32
+               moments r/w + per-layer activation w+r + f32 logits + grad
+      prefill: params + KV write + activations
+      decode : params(active experts for MoE) + full KV-cache read/step
+    """
+    B, S = shape.global_batch, shape.seq_len
+    pbytes = rec["param_bytes_global"]
+    d = cfg.d_model
+    vp = padded_vocab(cfg.vocab)
+    p_chip = pbytes / tp
+    if shape.kind == "train":
+        toks = B * S
+        act = 2 * toks * d * 2 * cfg.n_layers * 2 / chips  # w+r bf16/layer
+        if cfg.xent_chunk:
+            logits = 2 * toks * vp * 4 / chips  # live chunk only, r+w once
+        else:
+            logits = 2 * toks * vp * 4 * 2 / chips  # f32 logits + grad, r/w
+        passes = 3 if cfg.remat else 2
+        opt = (pbytes / 2) * 4 * 2 * 2 / tp  # m,v f32 read+write (sharded as params)
+        grads = pbytes / tp
+        return passes * p_chip + grads + opt + act + logits
+    if shape.kind == "prefill":
+        toks = B * S
+        kv = _kv_bytes(cfg, B, S) / chips
+        act = 2 * toks * d * 2 * cfg.n_layers / chips
+        return p_chip + kv + act
+    # decode
+    kv_global = _kv_bytes(cfg, B, S)
+    kv_sharded_model = (cfg.n_kv_heads % tp == 0) or cfg.mla or rec.get("seq_shard")
+    kv = kv_global / chips if kv_sharded_model else kv_global / (chips / tp)
+    active = pbytes
+    if cfg.n_experts:
+        exp = 3 * cfg.d_model * cfg.moe_d_ff * cfg.n_experts * 2 * (cfg.n_layers - cfg.first_k_dense)
+        active = pbytes - exp + min(exp, exp * cfg.top_k / cfg.n_experts * max(B / 8, 1))
+    return active / tp + kv
+
+
+def _kv_bytes(cfg: ModelConfig, B: int, S: int) -> float:
+    s_eff = min(S, cfg.window) if cfg.window else S
+    kv_scale = cfg.kv_bits / 16.0 + (0.25 if cfg.kv_bits < 16 else 0.0)  # + f32 scales/token
+    if cfg.family == "ssm":
+        di = cfg.expand * cfg.d_model
+        h = cfg.n_heads
+        return cfg.n_layers * B * (di // h) ** 2 * h * 4  # mLSTM C state f32
+    if cfg.family == "hybrid":
+        di = cfg.expand * cfg.d_model
+        hs = max(di // 64, 1)
+        state = cfg.n_layers * B * di * cfg.d_state * 4 / max(hs, 1) * hs / hs
+        n_apps = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+        kv = n_apps * B * s_eff * 2 * cfg.n_kv_heads * cfg.head_dim * 2
+        return state + kv
+    if cfg.mla:
+        per_tok = cfg.kv_lora_rank + cfg.rope_head_dim
+        return cfg.n_layers * B * s_eff * per_tok * 2
+    return cfg.n_layers * B * s_eff * 2 * cfg.n_kv_heads * cfg.head_dim * 2 * kv_scale
+
+
+def collective_wire_bytes(rec: dict) -> float:
+    """Per-chip wire bytes from the dry-run collective table (loop
+    multipliers already applied by the dry-run's HLO call-graph parse)."""
+    total = 0.0
+    for kind, a in rec.get("collectives", {}).items():
+        payload = a.get("bytes_total",
+                        a.get("bytes_once", 0) + a.get("bytes_looped", 0) * rec["n_layers"])
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        total += payload * factor
+    return total
+
+
+def analyze(rec: dict) -> dict:
+    cfg = ARCHS[rec["arch"]]
+    if rec.get("overrides"):
+        cfg = cfg.with_(**rec["overrides"])
+    shape = SHAPES[rec["shape"]]
+    chips = rec["devices"]
+    tp = 16
+    fl = model_flops(cfg, shape)
+    traffic = hbm_traffic_per_chip(cfg, shape, rec, chips, tp)
+    wire = collective_wire_bytes(rec)
+
+    t_compute = fl["total"] / (chips * PEAK_FLOPS)
+    t_memory = traffic / HBM_BW
+    t_coll = wire / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    step = max(terms.values())
+    mf = model_flops_6nd(cfg, shape, rec["param_bytes_global"])
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "variants": "+".join(rec.get("variants", [])),
+        **{k: float(f"{v:.3e}") for k, v in terms.items()},
+        "bottleneck": bottleneck.replace("_s", ""),
+        "step_s": float(f"{step:.3e}"),
+        "roofline_fraction": round(t_compute / step, 4) if step else 0.0,
+        "bw_util_proxy": round(t_memory / step, 4) if step else 0.0,
+        "hlo_flops": float(f"{fl['total']:.3e}"),
+        "model_flops_6nd": float(f"{mf:.3e}"),
+        "useful_ratio": round(mf / fl["total"], 3),
+        "hbm_bytes": float(f"{traffic:.3e}"),
+        "wire_bytes_per_chip": float(f"{wire:.3e}"),
+        "mem_temp_gib_per_chip": round(
+            (rec["memory_analysis"].get("temp_size_in_bytes") or 0) / 2**30, 2),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single_pod_16x16")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    rows = []
+    for f in sorted((RESULTS / args.mesh).glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "bottleneck": "-", "status": rec.get("status"),
+                         "reason": rec.get("reason", "")})
+            continue
+        rows.append(analyze(rec))
+
+    hdr = ["arch", "shape", "compute_s", "memory_s", "collective_s",
+           "bottleneck", "step_s", "roofline_fraction", "bw_util_proxy",
+           "useful_ratio", "mem_temp_gib_per_chip"]
+    print(",".join(hdr))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in hdr))
+    if args.json_out:
+        Path(args.json_out).write_text(json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark harness — one section per paper table/figure plus the Layer-B
+(TPU) tiered-KV benchmark. Prints ``name,value,unit`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only SUBSTR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced request counts")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import paper_figs, tiered_kv
+
+    q = args.quick
+    sections = [
+        ("fig2", lambda: paper_figs.fig2_mode_read_perf(20_000 if q else 60_000)),
+        ("fig3_4", paper_figs.fig3_4_retry_impact),
+        ("fig5_6", paper_figs.fig5_6_retry_distribution),
+        ("fig13_16", lambda: paper_figs.fig13_16_policy_comparison(
+            60_000 if q else 200_000,
+            thetas=(1.2,) if q else (1.2, 1.5),
+            threads=(4,) if q else (4, 1))),
+        ("fig17_18", lambda: paper_figs.fig17_18_sensitivity(40_000 if q else 120_000)),
+        ("tiered_kv", lambda: tiered_kv.kv_policy_comparison(24 if q else 48)),
+    ]
+
+    print("name,value,unit")
+    failures = 0
+    for name, fn in sections:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                n, v, u = row
+                v = f"{v:.4f}" if isinstance(v, float) else v
+                print(f"{n},{v},{u}", flush=True)
+            print(f"# section {name} took {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # keep the harness going
+            failures += 1
+            print(f"# section {name} FAILED: {type(e).__name__}: {e}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

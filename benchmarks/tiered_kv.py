@@ -1,0 +1,45 @@
+"""Layer-B benchmark: RARO-tiered KV cache vs static-tier baselines —
+the serving analogue of the paper's IOPS-vs-capacity trade (Figs. 13/14).
+
+Reports, per policy: KV HBM bytes (capacity), decode-output drift vs an
+exact bf16 cache (the 'read reliability' axis), and the modeled per-token
+HBM read traffic (the perf axis a real TPU is bound by at decode)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def kv_policy_comparison(steps=48, batch=2, seed=0):
+    from repro.kvcache import tiers
+    from repro.launch import serve
+
+    rows = []
+    cfg = serve.serve_cfg()
+    import jax
+
+    from repro.models import base, registry
+
+    params = base.materialize(registry.get_api(cfg).specs(), jax.random.PRNGKey(seed),
+                              jnp.float32)
+
+    # RARO (selective thresholds so only genuinely hot pages earn bf16)
+    out = serve.run(steps=steps, batch=batch, raro_enabled=True, cfg=cfg,
+                    params=params, quiet=True)
+    rows += [(f"tiered_kv/raro/{k}", v, "") for k, v in out.items()
+             if not isinstance(v, list)]
+    rows.append(("tiered_kv/raro/pages_bf16_int8_int4",
+                 float("nan"), str(out["tier_pages"])))
+
+    # static int4 (all-QLC analogue = the paper's Baseline device)
+    out4 = serve.run(steps=steps, batch=batch, raro_enabled=False, cfg=cfg,
+                     params=params, quiet=True)
+    rows += [(f"tiered_kv/int4_only/{k}", v, "") for k, v in out4.items()
+             if not isinstance(v, list)]
+
+    # headline: quality improvement at sub-bf16 capacity
+    rows.append(("tiered_kv/drift_ratio_int4_over_raro",
+                 out4["mean_prob_drift"] / max(out["mean_prob_drift"], 1e-12), "x"))
+    rows.append(("tiered_kv/raro_capacity_vs_bf16", 1 - out["capacity_saving"], "x"))
+    return rows

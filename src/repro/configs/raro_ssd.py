@@ -1,0 +1,8 @@
+"""The paper's own system config: FEMU-emulated hybrid SSD presets
+(Table III geometry) at the three wear stages."""
+from repro.ssdsim.geometry import SimConfig, RARO, HOTNESS, BASELINE
+
+YOUNG = SimConfig(policy=RARO, initial_pe=166, device_age_h=24.0)
+MIDDLE = SimConfig(policy=RARO, initial_pe=500, device_age_h=24.0)
+OLD = SimConfig(policy=RARO, initial_pe=833, device_age_h=24.0)
+STAGES = {"young": YOUNG, "middle": MIDDLE, "old": OLD}

@@ -1,0 +1,7 @@
+# The paper's primary contribution: the RARO reliability-aware
+# conversion/migration policy, as pure-JAX modules shared by the
+# flash-simulator layer (repro.ssdsim) and the TPU KV-cache tier
+# manager (repro.kvcache). See DESIGN.md §2.
+from repro.core import modes  # noqa: F401  (import order: no cycles)
+
+__all__ = ["modes", "rber", "retry", "hotness", "policy", "controller", "reclaim"]

@@ -1,0 +1,59 @@
+"""Flash-mode translation controller (paper §IV-A/§IV-D).
+
+The per-*page* Table-II decisions are aggregated to per-*block* conversion
+plans, because "the migration operation follows the principle of flash type
+alignment, i.e. taking the block as the smallest management unit to guarantee
+that all pages within the block remain uniform".
+
+A block converts to the lowest-density (fastest) target requested by any of
+its triggering pages; untouched blocks keep their mode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hotness, modes, policy, retry
+
+
+def block_conversion_plan(page_target, page_mode, page_block, page_valid, n_blocks,
+                          block_mode):
+    """Aggregate page-level targets into a per-block conversion plan.
+
+    Args:
+      page_target: (P,) int32 target mode per page (== page_mode if no trigger).
+      page_mode:   (P,) int32 current mode per page.
+      page_block:  (P,) int32 owning physical block of each page.
+      page_valid:  (P,) bool  page holds live data.
+      n_blocks:    static int.
+      block_mode:  (B,) int32 current block modes.
+
+    Returns:
+      (B,) int32 target block modes (= block_mode where nothing triggers).
+    """
+    triggered = (page_target != page_mode) & page_valid
+    # min over triggering pages per block; N_MODES (out of range) = no trigger.
+    req = jnp.where(triggered, page_target, modes.N_MODES)
+    per_block = jax.ops.segment_min(req, page_block, num_segments=n_blocks)
+    return jnp.where(per_block < modes.N_MODES, per_block, block_mode).astype(jnp.int32)
+
+
+def raro_page_decision(page_mode, page_heat, page_pe_cycles, page_time_h, page_reads,
+                       page_ids, heat_cfg: hotness.HeatConfig, r1: int = policy.DEFAULT_R1):
+    """Full RARO per-page pipeline (paper Fig. 11 three-stage pipeline):
+
+      1. heat classifier  ->  cold/warm/hot
+      2. RBER computing + read-retry calculator (Eq. 1 -> Eq. 3)
+      3. Table-II migration decision with stage-adaptive thresholds
+    """
+    heat_cls = hotness.classify(page_heat, heat_cfg)
+    retries = retry.page_retries(page_mode, page_pe_cycles, page_time_h, page_reads, page_ids)
+    th = policy.stage_thresholds(page_pe_cycles, r1=r1)
+    return policy.migration_decision(page_mode, heat_cls, retries, th), retries, heat_cls
+
+
+def hotness_page_decision(page_mode, page_heat, heat_cfg: hotness.HeatConfig):
+    """'Hotness' comparison scheme: temperature-only decision."""
+    heat_cls = hotness.classify(page_heat, heat_cfg)
+    return policy.hotness_only_decision(page_mode, heat_cls), heat_cls

@@ -1,0 +1,51 @@
+"""Heat classifier (paper §IV-A) — exponential-decay access-frequency counters.
+
+Works on whole arrays of counters so it can run inside jit/scan for both the
+SSD simulator (per logical page) and the KV-cache tier manager (per KV page,
+where "accesses" are attention-mass increments rather than unit counts).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import modes
+
+
+class HeatConfig(NamedTuple):
+    """Decay + classification thresholds.
+
+    ``decay`` is applied once per *epoch* (request chunk / decode step);
+    a counter that stops being touched decays to COLD within
+    ``log(warm_thresh) / -log(decay)`` epochs.
+    """
+
+    decay: float = 0.95
+    hot_thresh: float = 2.0
+    warm_thresh: float = 0.5
+
+
+def decay_heat(heat, cfg: HeatConfig):
+    return heat * cfg.decay
+
+
+def accumulate(heat, idx, amount=1.0):
+    """Scatter-add ``amount`` at ``idx`` (duplicate indices accumulate)."""
+    return heat.at[idx].add(amount)
+
+
+def update_heat(heat, idx, cfg: HeatConfig, amount=1.0):
+    """One epoch: decay everything, then credit the accessed entries."""
+    return accumulate(decay_heat(heat, cfg), idx, amount)
+
+
+def classify(heat, cfg: HeatConfig):
+    """Counter values -> {COLD, WARM, HOT} labels."""
+    heat = jnp.asarray(heat)
+    return jnp.where(
+        heat >= cfg.hot_thresh,
+        modes.HOT,
+        jnp.where(heat >= cfg.warm_thresh, modes.WARM, modes.COLD),
+    ).astype(jnp.int32)

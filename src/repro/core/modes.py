@@ -1,0 +1,78 @@
+"""Flash-mode / KV-tier constants shared by both layers of the framework.
+
+Layer A (ssdsim): SLC / TLC / QLC flash modes, Table III/IV of the paper.
+Layer B (kvcache): bf16 / int8 / int4 KV-page tiers — same ordering, so the
+policy code in :mod:`repro.core.policy` is tier-agnostic (mode id 0 is always
+the fastest/most-reliable, mode id 2 the densest).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Mode ids. Order matters: lower id == lower density == higher reliability.
+# ---------------------------------------------------------------------------
+SLC = 0
+TLC = 1
+QLC = 2
+N_MODES = 3
+
+MODE_NAMES = ("SLC", "TLC", "QLC")
+
+# Bits per cell (paper §II-B). Layer B reads this as bits per KV element
+# (bf16 = 16, int8 = 8, int4 = 4) via TIER_BITS below.
+BITS_PER_CELL = jnp.array([1, 3, 4], dtype=jnp.int32)
+
+# Number of reference-voltage senses for a worst-case page read (paper §II-D:
+# SLC needs 1; TLC 2-3-2 Gray worst page 3, we use the commonly-cited 4 for a
+# full-page LSB+CSB+MSB read; QLC needs up to 8 depending on the Gray code).
+N_SENSE = jnp.array([1, 4, 8], dtype=jnp.int32)
+
+# Device retry-table limits (a real controller has a finite retry table; the
+# paper observes up to 16 on old QLC).
+MAX_RETRIES = jnp.array([8, 16, 16], dtype=jnp.int32)
+
+# Pages per block when a physical block is programmed in each mode (Table III).
+PAGES_PER_BLOCK = jnp.array([256, 768, 1024], dtype=jnp.int32)
+
+# Table IV latencies, microseconds.
+READ_LATENCY_US = jnp.array([20.0, 66.0, 140.0], dtype=jnp.float32)
+WRITE_LATENCY_US = jnp.array([160.0, 730.0, 3102.0], dtype=jnp.float32)
+ERASE_LATENCY_US = jnp.array([2000.0, 3000.0, 10000.0], dtype=jnp.float32)
+
+# Rated P/E endurance per mode (Table IV).
+PE_LIMIT = jnp.array([100_000, 3_000, 1_000], dtype=jnp.int32)
+
+# ---------------------------------------------------------------------------
+# Heat classes (paper §IV-A heat classifier).
+# ---------------------------------------------------------------------------
+COLD = 0
+WARM = 1
+HOT = 2
+HEAT_NAMES = ("COLD", "WARM", "HOT")
+
+# ---------------------------------------------------------------------------
+# Wear stages (Table I) — QLC P/E-cycle bands.
+# ---------------------------------------------------------------------------
+STAGE_YOUNG = 0
+STAGE_MIDDLE = 1
+STAGE_OLD = 2
+STAGE_NAMES = ("young", "middle", "old")
+STAGE_BOUNDS = jnp.array([333, 666, 1_000_000], dtype=jnp.int32)
+
+
+def stage_of(pe_cycles):
+    """Map P/E-cycle counts to wear stages per Table I (young/middle/old)."""
+    pe = jnp.asarray(pe_cycles)
+    return jnp.where(pe <= 333, STAGE_YOUNG, jnp.where(pe <= 666, STAGE_MIDDLE, STAGE_OLD)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Layer-B tier view of the same ids (bf16 / int8 / int4).
+# ---------------------------------------------------------------------------
+TIER_BF16 = SLC
+TIER_INT8 = TLC
+TIER_INT4 = QLC
+TIER_NAMES = ("bf16", "int8", "int4")
+TIER_BITS = jnp.array([16, 8, 4], dtype=jnp.int32)

@@ -1,0 +1,74 @@
+"""RARO migration principles — Table II of the paper.
+
+| NAND | Access frequency | Retry count        | Conversion |
+|------|------------------|--------------------|------------|
+| QLC  | Hot              | >= R1              | QLC -> SLC |
+| QLC  | Warm             | >= R2 (R2 >= R1)   | QLC -> TLC |
+| TLC  | Hot              | >= R1              | TLC -> SLC |
+
+plus the stage-dependent R2 schedule chosen by the paper's sensitivity study
+(§V-C): R2 = 5 / 7 / 11 for young / middle / old, R1 = 1.
+
+The decision function is pure and element-wise, so it is shared verbatim by
+the SSD simulator (flash modes) and the KV-cache tier manager (precision
+tiers) — see DESIGN.md §2B for the mapping.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import modes
+
+# Paper §V-C: R1 = 1 because freshly converted TLC needs <= 1 retry.
+DEFAULT_R1 = 1
+# Paper Fig. 17/18 conclusion: R2 = 5 / 7 / 11 per wear stage.
+R2_BY_STAGE = jnp.array([5, 7, 11], dtype=jnp.int32)
+
+
+class Thresholds(NamedTuple):
+    r1: jnp.ndarray  # int32 scalar or per-element
+    r2: jnp.ndarray  # int32 scalar or per-element (r2 >= r1)
+
+
+def stage_thresholds(pe_cycles, r1: int = DEFAULT_R1) -> Thresholds:
+    """Per-element thresholds with the paper's stage-adaptive R2 schedule."""
+    stage = modes.stage_of(pe_cycles)
+    return Thresholds(jnp.int32(r1), R2_BY_STAGE[stage])
+
+
+def migration_decision(mode, heat_cls, retries, th: Thresholds):
+    """Table II, element-wise. Returns the *target* mode for every entry.
+
+    Entries that do not trigger keep their current mode ("continue to
+    maintain QLC storage to relegate relocation expenditure").
+    """
+    mode = jnp.asarray(mode, jnp.int32)
+    heat_cls = jnp.asarray(heat_cls, jnp.int32)
+    retries = jnp.asarray(retries, jnp.int32)
+
+    qlc_hot = (mode == modes.QLC) & (heat_cls == modes.HOT) & (retries >= th.r1)
+    qlc_warm = (mode == modes.QLC) & (heat_cls == modes.WARM) & (retries >= th.r2)
+    tlc_hot = (mode == modes.TLC) & (heat_cls == modes.HOT) & (retries >= th.r1)
+
+    target = mode
+    target = jnp.where(qlc_warm, modes.TLC, target)
+    # QLC->SLC takes precedence over QLC->TLC (hot beats warm by construction,
+    # but keep the order explicit).
+    target = jnp.where(qlc_hot, modes.SLC, target)
+    target = jnp.where(tlc_hot, modes.SLC, target)
+    return target
+
+
+def hotness_only_decision(mode, heat_cls):
+    """The paper's 'Hotness' comparison scheme: temperature-only 3-mode
+    conversion, ignoring retry counts (used as the capacity-loss baseline)."""
+    mode = jnp.asarray(mode, jnp.int32)
+    heat_cls = jnp.asarray(heat_cls, jnp.int32)
+    target = mode
+    target = jnp.where((mode == modes.QLC) & (heat_cls == modes.WARM), modes.TLC, target)
+    target = jnp.where((mode == modes.QLC) & (heat_cls == modes.HOT), modes.SLC, target)
+    target = jnp.where((mode == modes.TLC) & (heat_cls == modes.HOT), modes.SLC, target)
+    return target

@@ -1,0 +1,134 @@
+"""Raw-bit-error-rate model — Equation (1) of the paper.
+
+``RBER(cycles, time, reads) = eps + alpha*cycles^k            (wear)
+                             + beta*cycles^m * time^n          (retention)
+                             + gamma*cycles^p * reads^q        (read disturb)``
+
+Constants are per flash mode and were calibrated (see
+``tests/test_retry_calibration.py`` and DESIGN.md §6) so that the Eq.-(3)
+retry estimate lands in the paper's measured bands (Fig. 5/6):
+
+  QLC  young 1–10 retries (bulk 4–9),  middle 5–13 (bulk 7–12),
+       old 11–16 with ~9.7% of pages pinned at the table max of 16.
+  TLC  far fewer retries than QLC at the same stage; a freshly converted
+       TLC block sees <= 1 retry under typical load (paper §V-C), which is
+       why the paper selects R1 = 1.
+  SLC  effectively retry-free.
+
+Per-page variation (3D-NAND layer-to-layer / process variation, §II-C) is
+modelled as a deterministic lognormal multiplier keyed on the physical page
+id, so the simulator is fully reproducible.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import modes
+
+
+class RBERParams(NamedTuple):
+    """Eq. (1) constants for one flash mode (all float32 scalars)."""
+
+    eps: jnp.ndarray
+    alpha: jnp.ndarray
+    k: jnp.ndarray
+    beta: jnp.ndarray
+    m: jnp.ndarray
+    n: jnp.ndarray
+    gamma: jnp.ndarray
+    p: jnp.ndarray
+    q: jnp.ndarray
+
+
+def _params(eps, alpha, k, beta, m, n, gamma, p, q) -> RBERParams:
+    return RBERParams(*[jnp.float32(v) for v in (eps, alpha, k, beta, m, n, gamma, p, q)])
+
+
+# ---------------------------------------------------------------------------
+# Calibrated constants. "time" is hours since program; "reads" is reads to the
+# page's block since program; "cycles" is block P/E count.
+#
+# QLC calibration anchors (n_sense=8, delta=0.2, E_LDPC=72/8192 -> see
+# retry.py): retries ~= log_0.8(1.0986e-3 / RBER), so
+#   RBER 4.2e-3  -> ~6 retries   (young centre)
+#   RBER 8.2e-3  -> ~9 retries   (middle centre)
+#   RBER 2.2e-2  -> ~13.5 retries (old centre; lognormal tail clips at 16)
+# ---------------------------------------------------------------------------
+MODE_RBER_PARAMS: dict[int, RBERParams] = {
+    # SLC: wide noise margin; essentially flat and tiny.
+    modes.SLC: _params(
+        eps=1e-5, alpha=2e-9, k=1.0, beta=1e-11, m=1.0, n=0.5, gamma=1e-12, p=1.0, q=0.5
+    ),
+    # TLC: fresh (time~0, reads~0) RBER stays below the 1-retry point even at
+    # +2.3 sigma page variation (eps + alpha*c <= ~9.6e-4 at c=500), which is
+    # the paper's observation that freshly converted TLC needs <= 1 retry and
+    # hence R1 = 1. Retention/disturb keep TLC well under QLC at equal stage.
+    modes.TLC: _params(
+        eps=6e-4, alpha=7e-7, k=1.0, beta=3.0e-10, m=1.6, n=0.7, gamma=4.3e-10, p=1.0, q=1.1
+    ),
+    # QLC anchors. Two regimes matter (paper §V-C chose R2 at the LOW end of
+    # each stage's Fig.-6 band, i.e. lightly-stressed pages must sit BELOW
+    # R2 while heavily-read blocks rise above it via read disturb):
+    #   fresh/lightly-read (t~24h, r<~100):  young ~4, middle ~6, old ~9
+    #     retries — below the 5/7/11 R2 schedule, so warm data in healthy
+    #     blocks is NOT converted (RARO's capacity saving).
+    #   heavily-read blocks (r ~2000+):      young ~6, middle ~10, old ~13
+    #     retries — the Fig. 6 bulk bands; these DO convert.
+    # Disturb is deliberately the steep term (q=1.1 in reads).
+    modes.QLC: _params(
+        eps=1.3e-3, alpha=3.2e-6, k=1.0, beta=3.25e-9, m=1.6, n=0.7, gamma=3.0e-9, p=1.0, q=1.1
+    ),
+}
+
+# Stacked (N_MODES, 9) table so mode can be a traced array index.
+_PARAM_TABLE = jnp.stack(
+    [jnp.stack(MODE_RBER_PARAMS[m]) for m in range(modes.N_MODES)]
+)  # (3, 9)
+
+# Per-page lognormal variation of ln-RBER (DESIGN.md §6): sigma such that the
+# retry spread matches the paper's per-stage bands (~±4 retries ~ 2 sigma).
+PAGE_SIGMA = 0.40
+
+
+def rber(mode, cycles, time_h, reads):
+    """Eq. (1). All args broadcastable arrays; ``mode`` int in {0,1,2}."""
+    P = _PARAM_TABLE[jnp.asarray(mode, jnp.int32)]  # (..., 9)
+    eps, alpha, k, beta, m, n, gamma, p, q = [P[..., i] for i in range(9)]
+    c = jnp.maximum(jnp.asarray(cycles, jnp.float32), 0.0)
+    t = jnp.maximum(jnp.asarray(time_h, jnp.float32), 0.0)
+    r = jnp.maximum(jnp.asarray(reads, jnp.float32), 0.0)
+    wear = alpha * jnp.power(c, k)
+    retention = beta * jnp.power(c, m) * jnp.power(t, n)
+    disturb = gamma * jnp.power(c, p) * jnp.power(r, q)
+    return eps + wear + retention + disturb
+
+
+def page_variation(page_ids, sigma: float = PAGE_SIGMA):
+    """Deterministic per-page lognormal factor (process variation).
+
+    Uses a stateless hash -> standard normal so that the same physical page
+    always has the same relative reliability, as real layer-to-layer
+    variation does.
+    """
+    pid = jnp.asarray(page_ids, jnp.uint32)
+    # xorshift-style integer hash
+    h = pid * jnp.uint32(0x9E3779B9)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    # two 16-bit halves -> uniform (0,1) pair -> Box-Muller normal
+    u1 = (jnp.float32(h & jnp.uint32(0xFFFF)) + 0.5) / 65536.0
+    u2 = (jnp.float32((h >> 16) & jnp.uint32(0xFFFF)) + 0.5) / 65536.0
+    z = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
+    return jnp.exp(sigma * z)
+
+
+def page_rber(mode, cycles, time_h, reads, page_ids):
+    """Eq. (1) with per-page process variation applied multiplicatively."""
+    return rber(mode, cycles, time_h, reads) * page_variation(page_ids)

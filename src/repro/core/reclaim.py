@@ -1,0 +1,65 @@
+"""Elastic capacity recovery (paper §IV-E, Fig. 12).
+
+Hot data migrated to SLC/TLC eventually cools; leaving it in low-density
+modes blocks the tiering path of new hot data and erodes capacity. The
+recovery policy demotes the *coldest* low-density blocks back toward QLC,
+but only under free-space pressure, weighing (paper's words) "the remaining
+space of the device, the efficiency of rubbish collection, and the user's
+writing demand".
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import modes
+
+
+class ReclaimConfig(NamedTuple):
+    # Demote only when free capacity fraction drops below this watermark.
+    low_watermark: float = 0.15
+    # Stop demoting once free capacity recovers to this level.
+    high_watermark: float = 0.25
+    # A block is demotable only if every page in it is COLD for this many
+    # consecutive epochs (hysteresis against sudden access-pattern changes).
+    cold_epochs: int = 4
+    # Cap on demotions per recovery pass (bounds write amplification).
+    max_per_pass: int = 8
+
+
+def demotion_scores(block_mode, block_heat, cold_age):
+    """Score blocks for demotion: only SLC/TLC, colder + longer-cold first.
+
+    Returns float scores; larger = better demotion candidate; -inf for
+    ineligible blocks.
+    """
+    block_mode = jnp.asarray(block_mode, jnp.int32)
+    eligible = block_mode < modes.QLC
+    # Cold age dominates; residual heat breaks ties (colder wins).
+    score = jnp.asarray(cold_age, jnp.float32) - 1e-3 * jnp.asarray(block_heat, jnp.float32)
+    return jnp.where(eligible, score, -jnp.inf)
+
+
+def select_demotions(block_mode, block_heat, cold_age, free_frac, cfg: ReclaimConfig):
+    """Pick up to ``max_per_pass`` blocks to demote one density level.
+
+    Returns (mask, target_mode): ``mask[b]`` true if block b is demoted this
+    pass; ``target_mode[b]`` its new mode (SLC->TLC->QLC one level per pass,
+    the paper's fine-grained multi-mode conversion in reverse).
+    """
+    scores = demotion_scores(block_mode, block_heat, cold_age)
+    eligible = (scores > -jnp.inf) & (jnp.asarray(cold_age) >= cfg.cold_epochs)
+    under_pressure = jnp.asarray(free_frac) < cfg.low_watermark
+
+    # Top-k by score among eligible blocks.
+    k = min(cfg.max_per_pass, block_mode.shape[-1])
+    masked = jnp.where(eligible, scores, -jnp.inf)
+    _, top_idx = jax.lax.top_k(masked, k)
+    mask = jnp.zeros(block_mode.shape, bool).at[top_idx].set(True)
+    mask = mask & eligible & under_pressure
+
+    target = jnp.where(mask, jnp.minimum(jnp.asarray(block_mode, jnp.int32) + 1, modes.QLC), block_mode)
+    return mask, target

@@ -1,0 +1,61 @@
+"""Read-retry model — Equations (2)/(3) of the paper.
+
+``(a * RBER * n_SENSE) * (1 - delta)^n_RETRY <= E_LDPC``            (2)
+``n_RETRY >= log_{1-delta}( E_LDPC / (a * RBER * n_SENSE) )``        (3)
+
+with delta = 0.2 (each retry drops the effective RBER to 80%) and
+E_LDPC = 72 correctable bits per 1 KiB (8192-bit) codeword, i.e. a
+correctable error *rate* of 72/8192 ~= 8.789e-3 (paper §II-D).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import modes, rber as rber_mod
+
+DELTA = 0.2
+E_LDPC_BITS = 72.0
+CODEWORD_BITS = 8192.0  # 1 KiB codeword
+E_LDPC_RATE = E_LDPC_BITS / CODEWORD_BITS
+ALPHA_ADJ = 1.0  # Eq.(2) adjacent-voltage-state factor `a`
+
+
+def expected_retries(rber, n_sense, *, delta: float = DELTA, e_ldpc: float = E_LDPC_RATE,
+                     a: float = ALPHA_ADJ):
+    """Continuous Eq.-(3) retry estimate (>= 0, unclipped)."""
+    rber = jnp.asarray(rber, jnp.float32)
+    n_sense = jnp.asarray(n_sense, jnp.float32)
+    raw = jnp.log(e_ldpc / jnp.maximum(a * rber * n_sense, 1e-30)) / jnp.log(1.0 - delta)
+    return jnp.maximum(raw, 0.0)
+
+
+def retry_count(mode, rber, *, delta: float = DELTA, e_ldpc: float = E_LDPC_RATE,
+                a: float = ALPHA_ADJ):
+    """Integer retries for a page of ``mode`` with raw error rate ``rber``.
+
+    Ceil of Eq. (3), clipped to the device retry-table limit for the mode.
+    A page whose first sense already satisfies LDPC (RBER*n_sense <= E) needs
+    zero retries.
+    """
+    mode = jnp.asarray(mode, jnp.int32)
+    n_sense = modes.N_SENSE[mode]
+    cont = expected_retries(rber, n_sense, delta=delta, e_ldpc=e_ldpc, a=a)
+    n = jnp.ceil(cont).astype(jnp.int32)
+    return jnp.clip(n, 0, modes.MAX_RETRIES[mode])
+
+
+def page_retries(mode, cycles, time_h, reads, page_ids):
+    """Full pipeline: Eq.(1) per-page RBER -> Eq.(3) retry count."""
+    r = rber_mod.page_rber(mode, cycles, time_h, reads, page_ids)
+    return retry_count(mode, r)
+
+
+def read_latency_us(mode, n_retries):
+    """Service time of a page read: base sense + one extra sense per retry.
+
+    Matches the paper's Fig. 4 measurements: for QLC, 1 retry halves
+    bandwidth (2x latency) and 10 retries cut it ~91-92% (11x latency).
+    """
+    base = modes.READ_LATENCY_US[jnp.asarray(mode, jnp.int32)]
+    return base * (1.0 + jnp.asarray(n_retries, jnp.float32))

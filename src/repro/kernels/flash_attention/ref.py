@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from repro.models.attention import reference_attention
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    return reference_attention(q, k, v, causal=causal)

@@ -1,0 +1,67 @@
+"""Pallas page-(re)quantization kernel — the RARO migration hot path.
+
+Grid over pages; each program loads one bf16 page (P, Hk, D) from the
+source view, computes per-head symmetric scales, emits the quantized page
+(int8, or int4 packed 2-per-byte) + scales + the relative RMS error of the
+page (the controller's RBER-analogue measurement, so migration cost and
+error tracking come from the same pass).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import modes
+
+_QMAX = {modes.TIER_INT8: 127.0, modes.TIER_INT4: 7.0}
+
+
+def _quant_kernel(x_ref, q_ref, s_ref, e_ref, *, tier: int, d: int):
+    x = x_ref[0].astype(jnp.float32)  # (P, Hk, D)
+    qmax = _QMAX[tier]
+    amax = jnp.max(jnp.abs(x), axis=(0, 2))  # (Hk,)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale[None, :, None]), -qmax, qmax)
+    err_num = jnp.sqrt(jnp.mean((x - q * scale[None, :, None]) ** 2))
+    err_den = jnp.sqrt(jnp.mean(x * x)) + 1e-8
+    if tier == modes.TIER_INT8:
+        q_ref[0] = q.astype(jnp.int8)
+    else:
+        qi = q.astype(jnp.int8)
+        lo = qi[..., 0::2] & 0x0F
+        hi = (qi[..., 1::2] & 0x0F) << 4
+        q_ref[0] = (lo | hi).astype(jnp.int8)
+    s_ref[0] = scale.astype(s_ref.dtype)
+    e_ref[0, 0] = (err_num / err_den).astype(e_ref.dtype)
+
+
+def quantize_pages(x, *, tier: int, interpret: bool = True):
+    """x: (N, P, Hk, D) bf16/f32 pages -> (q, scales (N, Hk), err (N,)).
+
+    q is (N, P, Hk, D) int8 for tier=int8 or (N, P, Hk, D//2) packed for
+    tier=int4.
+    """
+    n, p, hk, d = x.shape
+    dq = d if tier == modes.TIER_INT8 else d // 2
+    kernel = functools.partial(_quant_kernel, tier=tier, d=d)
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, p, hk, d), lambda i: (i, 0, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, p, hk, dq), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, hk), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, p, hk, dq), jnp.int8),
+            jax.ShapeDtypeStruct((n, hk), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the page-quantization kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import modes
+from repro.kvcache import quant
+
+
+def quant_pages_ref(x, *, tier: int):
+    if tier == modes.TIER_INT8:
+        q, s = quant.quantize_int8(x)
+        xd = quant.dequantize_int8(q, s, jnp.float32)
+    else:
+        q, s = quant.quantize_int4(x)
+        xd = quant.dequantize_int4(q, s, jnp.float32)
+    x32 = x.astype(jnp.float32)
+    err = jnp.sqrt(jnp.mean((x32 - xd) ** 2, axis=(1, 2, 3))) / (
+        jnp.sqrt(jnp.mean(x32**2, axis=(1, 2, 3))) + 1e-8
+    )
+    return q, s, err

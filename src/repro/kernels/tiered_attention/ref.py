@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for tiered paged-decode attention (gather + dense
+softmax over the dequantized logical sequence + per-page masses)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kvcache import paged
+
+NEG_INF = -1e30
+
+
+def tiered_decode_attention_ref(q, cache: paged.TieredKV, cfg: paged.CacheConfig):
+    """q: (B, H, D) -> (out (B,H,D) f32, page_mass (B, MaxP))."""
+    b, h, d = q.shape
+    p, mp, hk = cfg.page_size, cfg.max_pages, cfg.n_kv_heads
+    g = h // hk
+
+    K, V = paged.gather_kv(cache, cfg, jnp.float32)  # (B, MP, P, Hk, D)
+    K = K.reshape(b, mp * p, hk, d)
+    V = V.reshape(b, mp * p, hk, d)
+    # append buffer tokens at their true positions
+    K = jnp.concatenate([K, cache.buf_k.astype(jnp.float32)], axis=1)
+    V = jnp.concatenate([V, cache.buf_v.astype(jnp.float32)], axis=1)
+
+    pos = jnp.arange(mp * p)
+    committed = (cache.tier >= 0)[:, :, None]  # (B, MP, 1)
+    valid_pool = jnp.broadcast_to(committed, (b, mp, p)).reshape(b, mp * p)
+    n_buf = cache.seq_len % p
+    valid_buf = jnp.arange(p)[None, :] < n_buf[:, None]
+    valid = jnp.concatenate([valid_pool, valid_buf], axis=1)  # (B, MP*P + P)
+
+    qh = (q.astype(jnp.float32) * d**-0.5).reshape(b, hk, g, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qh, K)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = s.max(-1, keepdims=True)
+    pr = jnp.exp(s - m)
+    l = pr.sum(-1, keepdims=True)
+    probs = pr / jnp.maximum(l, 1e-30)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, V).reshape(b, h, d)
+
+    mass = probs.mean(axis=(1, 2))[:, : mp * p].reshape(b, mp, p).sum(-1)
+    return out, mass

@@ -1,0 +1,147 @@
+"""Pallas TPU tiered paged-decode attention kernel.
+
+One kernel instance per RARO tier (the dtype/dequant path is static per
+pool — the flash analogue of "all pages in a block share a mode"). For one
+decode token per sequence:
+
+  grid = (B, MaxPages); page slots come from the page table via SCALAR
+  PREFETCH (pltpu.PrefetchScalarGridSpec) so the DMA of the right page is
+  issued ahead of compute — the canonical TPU paged-attention pattern.
+
+Outputs are flash-decoding partials (m, l, acc) per sequence — combined
+across tiers + the bf16 write buffer by ops.combine_partials — plus the
+per-page attention mass (sum of unnormalized exp scores, normalized by the
+combiner), which is EXACTLY the hotness signal the RARO controller
+consumes. The hotness statistics therefore cost zero extra passes.
+
+VMEM per program: one page (P, Hk, D') + q (Hk*G, D) + partials —
+P=64, Hk<=16, D=128 int4-packed = 64*16*64 B = 64 KiB; tiny.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import modes
+
+NEG_INF = -1e30
+
+
+def _dequant_block(kp, scale, tier: int):
+    """kp: (P, Hk, D') int8/bf16 page block; scale: (Hk,) f32."""
+    if tier == modes.TIER_BF16:
+        return kp.astype(jnp.float32)
+    if tier == modes.TIER_INT8:
+        return kp.astype(jnp.float32) * scale[None, :, None]
+    # packed int4: (P, Hk, D//2) -> (P, Hk, D)
+    lo = ((kp & 0x0F) ^ 0x08) - 0x08
+    hi = kp >> 4
+    q = jnp.stack([lo, hi], axis=-1).reshape(kp.shape[0], kp.shape[1], -1)
+    return q.astype(jnp.float32) * scale[None, :, None]
+
+
+def _decode_kernel(tbl_ref, q_ref, kp_ref, vp_ref, sk_ref, sv_ref,
+                   o_ref, m_ref, l_ref, pp_ref, pm_ref, acc_ref, mscr_ref, lscr_ref,
+                   *, tier: int, n_pages: int, page: int, hk: int, g: int,
+                   d: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        mscr_ref[...] = jnp.full_like(mscr_ref, NEG_INF)
+        lscr_ref[...] = jnp.zeros_like(lscr_ref)
+
+    valid = tbl_ref[b, j] >= 0
+
+    @pl.when(valid)
+    def _page():
+        q = q_ref[0].astype(jnp.float32) * scale  # (Hk*G, D)
+        k = _dequant_block(kp_ref[0], sk_ref[0], tier)  # (P, Hk, D)
+        v = _dequant_block(vp_ref[0], sv_ref[0], tier)
+        qh = q.reshape(hk, g, d)
+        s = jnp.einsum("hgd,phd->hgp", qh, k)  # (Hk, G, P)
+        m_prev = mscr_ref[...]  # (Hk, G)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        lscr_ref[...] = lscr_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum("hgp,phd->hgd", p, v)
+        mscr_ref[...] = m_new
+        # per-(page, head) exp-sum + the max it was computed against; the
+        # combiner renormalizes exactly with the final (m, l).
+        pp_ref[0, 0] = p.sum(axis=-1).reshape(hk * g).astype(pp_ref.dtype)
+        pm_ref[0, 0] = m_new.reshape(hk * g).astype(pm_ref.dtype)
+
+    @pl.when(~valid)
+    def _skip():
+        pp_ref[0, 0] = jnp.zeros_like(pp_ref[0, 0])
+        pm_ref[0, 0] = jnp.full_like(pm_ref[0, 0], NEG_INF)
+
+    @pl.when(j == n_pages - 1)
+    def _finalize():
+        o_ref[0] = acc_ref[...].reshape(hk * g, d).astype(o_ref.dtype)
+        m_ref[0] = mscr_ref[...].reshape(hk * g).astype(m_ref.dtype)
+        l_ref[0] = lscr_ref[...].reshape(hk * g).astype(l_ref.dtype)
+
+
+def tiered_decode_partial(q, k_pool, v_pool, sk, sv, slot_table, *, tier: int,
+                          interpret: bool = True):
+    """Per-tier flash-decoding partials.
+
+    q: (B, H, D) one token per sequence.
+    k_pool/v_pool: (N, P, Hk, D') pages (D' = D, or D//2 when tier=int4).
+    sk/sv: (N, Hk) f32 scales (ignored for bf16; pass ones).
+    slot_table: (B, MaxP) int32 pool slots for THIS tier, -1 = not-this-tier.
+
+    Returns (o (B,H,D) f32 unnormalized acc, m (B,H), l (B,H),
+             page_p (B,MaxP,H) per-page exp-sums, page_m (B,MaxP,H) the max
+             each was computed against) — combine with ops.combine_partials.
+    """
+    b, h, d = q.shape
+    n, page, hk, dp = k_pool.shape
+    g = h // hk
+    mp = slot_table.shape[1]
+
+    kernel = functools.partial(
+        _decode_kernel, tier=tier, n_pages=mp, page=page, hk=hk, g=g, d=d,
+        scale=d**-0.5,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, mp),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda b, j, t: (b, 0, 0)),
+            pl.BlockSpec((1, page, hk, dp), lambda b, j, t: (jnp.maximum(t[b, j], 0), 0, 0, 0)),
+            pl.BlockSpec((1, page, hk, dp), lambda b, j, t: (jnp.maximum(t[b, j], 0), 0, 0, 0)),
+            pl.BlockSpec((1, hk), lambda b, j, t: (jnp.maximum(t[b, j], 0), 0)),
+            pl.BlockSpec((1, hk), lambda b, j, t: (jnp.maximum(t[b, j], 0), 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, d), lambda b, j, t: (b, 0, 0)),
+            pl.BlockSpec((1, h), lambda b, j, t: (b, 0)),
+            pl.BlockSpec((1, h), lambda b, j, t: (b, 0)),
+            pl.BlockSpec((1, 1, h), lambda b, j, t: (b, j, 0)),
+            pl.BlockSpec((1, 1, h), lambda b, j, t: (b, j, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((hk, g, d), jnp.float32),
+            pltpu.VMEM((hk, g), jnp.float32),
+            pltpu.VMEM((hk, g), jnp.float32),
+        ],
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+        jax.ShapeDtypeStruct((b, h), jnp.float32),
+        jax.ShapeDtypeStruct((b, h), jnp.float32),
+        jax.ShapeDtypeStruct((b, mp, h), jnp.float32),
+        jax.ShapeDtypeStruct((b, mp, h), jnp.float32),
+    ]
+    return pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(slot_table, q, k_pool, v_pool, sk, sv)

@@ -1,0 +1,2 @@
+# RARO-tiered paged KV cache (the paper's technique on TPU, DESIGN.md §2B).
+from repro.kvcache import paged, quant, tiers  # noqa: F401

@@ -1,0 +1,232 @@
+"""Tiered paged KV cache — the RARO technique as a TPU serving feature.
+
+Layout (one attention layer; the serving loop scans layers over a stacked
+pytree):
+
+  * an open-page WRITE BUFFER per sequence, bf16 (fresh tokens always start
+    at full precision — flash analogue: data lands in the write path before
+    any mode decision);
+  * three fixed POOLS, one per tier: bf16 / int8 / packed-int4 pages of
+    ``page_size`` tokens with per-(page, head) scales (tier ids == flash
+    mode ids, see core.modes);
+  * a (tier, slot) page table per sequence plus per-logical-page metadata
+    (hotness = decayed attention mass, birth step, requant count, reads)
+    feeding the RARO controller in tiers.py.
+
+All ops are jit-friendly with static shapes; masked scatters use the
+drop-OOB discipline.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import modes
+from repro.kvcache import quant
+
+
+@dataclass(frozen=True)
+class CacheConfig:
+    n_seqs: int
+    max_pages: int  # logical pages per sequence
+    page_size: int
+    n_kv_heads: int
+    head_dim: int
+    pool_pages: tuple[int, int, int] = (64, 128, 1024)  # bf16 / int8 / int4
+    migrate_per_step: int = 8
+    # pool-pressure watermarks for elastic recovery (fraction occupied)
+    high_watermark: float = 0.9
+
+
+class TieredKV(NamedTuple):
+    # write buffer (open page per sequence)
+    buf_k: jnp.ndarray  # (B, P, Hk, Dh) bf16
+    buf_v: jnp.ndarray
+    # pools
+    k16: jnp.ndarray  # (N0, P, Hk, Dh) bf16
+    v16: jnp.ndarray
+    k8: jnp.ndarray  # (N1, P, Hk, Dh) int8
+    v8: jnp.ndarray
+    sk8: jnp.ndarray  # (N1, Hk) f32
+    sv8: jnp.ndarray
+    k4: jnp.ndarray  # (N2, P, Hk, Dh//2) packed int4
+    v4: jnp.ndarray
+    sk4: jnp.ndarray
+    sv4: jnp.ndarray
+    # page tables
+    tier: jnp.ndarray  # (B, MaxP) int32, -1 = empty
+    slot: jnp.ndarray  # (B, MaxP) int32
+    seq_len: jnp.ndarray  # (B,) int32
+    # pool free masks
+    free: tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]  # (Nt,) bool each
+    # per-logical-page metadata (RARO inputs)
+    hot: jnp.ndarray  # (B, MaxP) f32 decayed attention mass
+    born: jnp.ndarray  # (B, MaxP) i32 step of commit
+    requants: jnp.ndarray  # (B, MaxP) i32 quantization events
+    reads: jnp.ndarray  # (B, MaxP) f32 attention-mass-weighted reads
+    step: jnp.ndarray  # i32 scalar
+
+
+def init(cfg: CacheConfig, dtype=jnp.bfloat16) -> TieredKV:
+    b, mp, p, hk, dh = cfg.n_seqs, cfg.max_pages, cfg.page_size, cfg.n_kv_heads, cfg.head_dim
+    n0, n1, n2 = cfg.pool_pages
+    f32, i32 = jnp.float32, jnp.int32
+    return TieredKV(
+        buf_k=jnp.zeros((b, p, hk, dh), dtype),
+        buf_v=jnp.zeros((b, p, hk, dh), dtype),
+        k16=jnp.zeros((n0, p, hk, dh), dtype),
+        v16=jnp.zeros((n0, p, hk, dh), dtype),
+        k8=jnp.zeros((n1, p, hk, dh), jnp.int8),
+        v8=jnp.zeros((n1, p, hk, dh), jnp.int8),
+        sk8=jnp.ones((n1, hk), f32),
+        sv8=jnp.ones((n1, hk), f32),
+        k4=jnp.zeros((n2, p, hk, dh // 2), jnp.int8),
+        v4=jnp.zeros((n2, p, hk, dh // 2), jnp.int8),
+        sk4=jnp.ones((n2, hk), f32),
+        sv4=jnp.ones((n2, hk), f32),
+        tier=jnp.full((b, mp), -1, i32),
+        slot=jnp.full((b, mp), -1, i32),
+        seq_len=jnp.zeros((b,), i32),
+        free=tuple(jnp.ones((n,), bool) for n in (n0, n1, n2)),
+        hot=jnp.zeros((b, mp), f32),
+        born=jnp.zeros((b, mp), i32),
+        requants=jnp.zeros((b, mp), i32),
+        reads=jnp.zeros((b, mp), f32),
+        step=jnp.int32(0),
+    )
+
+
+def _alloc(free, want_b):
+    """Allocate one slot per True entry of want_b (B,). Returns (slots (B,),
+    new free). Over-subscription yields -1 for the losers."""
+    n = free.shape[0]
+    b = want_b.shape[0]
+    order = jnp.argsort(~free)  # free slots first
+    rank = jnp.cumsum(want_b.astype(jnp.int32)) - 1
+    avail = free.sum()
+    slots = jnp.where(want_b & (rank < avail), order[jnp.clip(rank, 0, n - 1)], -1)
+    new_free = free.at[jnp.where(slots >= 0, slots, n)].set(False, mode="drop")
+    return slots.astype(jnp.int32), new_free
+
+
+def _store_page(pools, tier_id: int, slots, kpage, vpage):
+    """Write full pages (B, P, Hk, Dh) bf16 into pool ``tier_id`` at
+    ``slots`` (B,), masked where slot < 0. Returns updated pool arrays."""
+    (k16, v16, k8, v8, sk8, sv8, k4, v4, sk4, sv4) = pools
+    n = [k16, k8, k4][tier_id].shape[0]
+    idx = jnp.where(slots >= 0, slots, n)
+    if tier_id == modes.TIER_BF16:
+        k16 = k16.at[idx].set(kpage.astype(k16.dtype), mode="drop")
+        v16 = v16.at[idx].set(vpage.astype(v16.dtype), mode="drop")
+    elif tier_id == modes.TIER_INT8:
+        qk, sk = quant.quantize_int8(kpage)
+        qv, sv = quant.quantize_int8(vpage)
+        k8 = k8.at[idx].set(qk, mode="drop")
+        v8 = v8.at[idx].set(qv, mode="drop")
+        sk8 = sk8.at[idx].set(sk, mode="drop")
+        sv8 = sv8.at[idx].set(sv, mode="drop")
+    else:
+        qk, sk = quant.quantize_int4(kpage)
+        qv, sv = quant.quantize_int4(vpage)
+        k4 = k4.at[idx].set(qk, mode="drop")
+        v4 = v4.at[idx].set(qv, mode="drop")
+        sk4 = sk4.at[idx].set(sk, mode="drop")
+        sv4 = sv4.at[idx].set(sv, mode="drop")
+    return (k16, v16, k8, v8, sk8, sv8, k4, v4, sk4, sv4)
+
+
+def _load_page(c: TieredKV, tiers, slots, dtype=jnp.bfloat16):
+    """Gather + dequantize logical pages. tiers/slots: (...,) -> K,V of
+    shape (..., P, Hk, Dh). Invalid (tier<0) pages come back as zeros."""
+    t = jnp.maximum(tiers, 0)
+    s0 = jnp.clip(slots, 0, c.k16.shape[0] - 1)
+    s1 = jnp.clip(slots, 0, c.k8.shape[0] - 1)
+    s2 = jnp.clip(slots, 0, c.k4.shape[0] - 1)
+    k = jnp.where(
+        (t == 0)[..., None, None, None],
+        c.k16[s0].astype(dtype),
+        jnp.where(
+            (t == 1)[..., None, None, None],
+            quant.dequantize_int8(c.k8[s1], c.sk8[s1], dtype),
+            quant.dequantize_int4(c.k4[s2], c.sk4[s2], dtype),
+        ),
+    )
+    v = jnp.where(
+        (t == 0)[..., None, None, None],
+        c.v16[s0].astype(dtype),
+        jnp.where(
+            (t == 1)[..., None, None, None],
+            quant.dequantize_int8(c.v8[s1], c.sv8[s1], dtype),
+            quant.dequantize_int4(c.v4[s2], c.sv4[s2], dtype),
+        ),
+    )
+    valid = (tiers >= 0)[..., None, None, None]
+    return jnp.where(valid, k, 0), jnp.where(valid, v, 0)
+
+
+def append(c: TieredKV, cfg: CacheConfig, k_new, v_new, commit_tier):
+    """Append one token's KV per sequence (k_new/v_new: (B, Hk, Dh)).
+
+    When a buffer page fills, it is committed to the pool of
+    ``commit_tier[b]`` (the RARO write-path decision from tiers.py).
+    """
+    b, p = cfg.n_seqs, cfg.page_size
+    off = c.seq_len % p
+    bidx = jnp.arange(b)
+    buf_k = c.buf_k.at[bidx, off].set(k_new.astype(c.buf_k.dtype))
+    buf_v = c.buf_v.at[bidx, off].set(v_new.astype(c.buf_v.dtype))
+    seq_len = c.seq_len + 1
+    page_full = (seq_len % p) == 0
+    page_idx = (seq_len - 1) // p  # logical page being committed
+
+    pools = (c.k16, c.v16, c.k8, c.v8, c.sk8, c.sv8, c.k4, c.v4, c.sk4, c.sv4)
+    free = list(c.free)
+    tier_tab, slot_tab = c.tier, c.slot
+    born, requants = c.born, c.requants
+    commit = jnp.asarray(commit_tier, jnp.int32)
+    for t in (modes.TIER_BF16, modes.TIER_INT8, modes.TIER_INT4):
+        want = page_full & (commit == t)
+        slots, free[t] = _alloc(free[t], want)
+        # pool exhausted -> fall back to the next denser tier (flash
+        # analogue: no free low-density block, data stays dense)
+        failed = want & (slots < 0)
+        commit = jnp.where(failed, jnp.minimum(t + 1, modes.TIER_INT4), commit)
+        pools = _store_page(pools, t, slots, buf_k, buf_v)
+        ok = slots >= 0
+        mp = cfg.max_pages
+        at = (jnp.where(ok, bidx, b), jnp.where(ok, jnp.minimum(page_idx, mp - 1), 0))
+        tier_tab = tier_tab.at[at].set(t, mode="drop")
+        slot_tab = slot_tab.at[at].set(slots, mode="drop")
+        born = born.at[at].set(c.step, mode="drop")
+        requants = requants.at[at].add(jnp.where(t == modes.TIER_BF16, 0, 1), mode="drop")
+
+    (k16, v16, k8, v8, sk8, sv8, k4, v4, sk4, sv4) = pools
+    return c._replace(
+        buf_k=buf_k, buf_v=buf_v, k16=k16, v16=v16, k8=k8, v8=v8, sk8=sk8,
+        sv8=sv8, k4=k4, v4=v4, sk4=sk4, sv4=sv4, tier=tier_tab, slot=slot_tab,
+        seq_len=seq_len, free=tuple(free), born=born, requants=requants,
+        step=c.step + 1,
+    )
+
+
+def gather_kv(c: TieredKV, cfg: CacheConfig, dtype=jnp.bfloat16):
+    """Reference read path: dequantize every committed page into dense
+    (B, MaxP, P, Hk, Dh) K/V (tests + jnp serving reference; the Pallas
+    tiered_attention kernel replaces this on TPU)."""
+    return _load_page(c, c.tier, c.slot, dtype)
+
+
+def pool_occupancy(c: TieredKV):
+    return tuple(1.0 - f.mean() for f in c.free)
+
+
+def memory_bytes(c: TieredKV, cfg: CacheConfig):
+    """HBM bytes of committed pages (the 'capacity' axis of the paper)."""
+    p, hk, dh = cfg.page_size, cfg.n_kv_heads, cfg.head_dim
+    page_b = {0: 2 * p * hk * dh * 2, 1: 2 * p * hk * dh, 2: p * hk * dh}
+    used = [(~f).sum() for f in c.free]
+    return sum(int(u) * page_b[t] for t, u in enumerate(used))

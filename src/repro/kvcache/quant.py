@@ -1,0 +1,80 @@
+"""KV-page quantization: bf16 <-> int8 <-> packed int4, per-(page, head)
+symmetric scales. These are the three RARO tiers (DESIGN.md §2B):
+
+  tier 0 (SLC analogue)  bf16   — fastest/most-reliable read
+  tier 1 (TLC analogue)  int8
+  tier 2 (QLC analogue)  int4   — densest, highest dequant error
+
+Pure-jnp reference implementations; kernels/quant_page is the Pallas
+migration kernel validated against these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import modes
+
+INT4_MAX = 7.0
+INT8_MAX = 127.0
+
+
+def quant_scales(x, qmax: float):
+    """x: (..., P, H, D) -> per-(page-leading..., H) scale over (P, D)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(-3, -1))
+    return jnp.maximum(amax, 1e-8) / qmax
+
+
+def quantize_int8(x):
+    s = quant_scales(x, INT8_MAX)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None, :, None]), -127, 127)
+    return q.astype(jnp.int8), s
+
+
+def dequantize_int8(q, s, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * s[..., None, :, None]).astype(dtype)
+
+
+def pack_int4(q):
+    """int8 values in [-8, 7], (..., D) with even D -> (..., D//2) packed."""
+    lo = q[..., 0::2] & 0x0F
+    hi = (q[..., 1::2] & 0x0F) << 4
+    return (lo | hi).astype(jnp.int8)
+
+
+def unpack_int4(p):
+    """(..., D//2) packed -> (..., D) sign-extended int8 in [-8, 7]."""
+    lo = ((p & 0x0F) ^ 0x08) - 0x08  # sign-extend low nibble
+    hi = p >> 4  # arithmetic shift sign-extends the high nibble
+    d2 = p.shape[-1]
+    out = jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1], 2 * d2)
+    return out.astype(jnp.int8)
+
+
+def quantize_int4(x):
+    s = quant_scales(x, INT4_MAX)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None, :, None]), -7, 7)
+    return pack_int4(q.astype(jnp.int8)), s
+
+
+def dequantize_int4(p, s, dtype=jnp.bfloat16):
+    q = unpack_int4(p)
+    return (q.astype(jnp.float32) * s[..., None, :, None]).astype(dtype)
+
+
+def quant_error(x, tier: int):
+    """Relative RMS dequantization error of storing x at ``tier`` — the
+    Layer-B analogue of the paper's RBER (the 'raw error rate' of the denser
+    medium). Returns per-(..., H) float32."""
+    x32 = x.astype(jnp.float32)
+    if tier == modes.TIER_BF16:
+        return jnp.zeros(x.shape[:-3] + (x.shape[-2],), jnp.float32)
+    if tier == modes.TIER_INT8:
+        q, s = quantize_int8(x)
+        xd = dequantize_int8(q, s, jnp.float32)
+    else:
+        q, s = quantize_int4(x)
+        xd = dequantize_int4(q, s, jnp.float32)
+    num = jnp.sqrt(jnp.mean((x32 - xd) ** 2, axis=(-3, -1)))
+    den = jnp.sqrt(jnp.mean(x32**2, axis=(-3, -1))) + 1e-8
+    return num / den

@@ -1,0 +1,167 @@
+"""RARO tier controller for the paged KV cache.
+
+Drives the SAME policy code as the flash simulator (core.policy Table II,
+core.hotness, core.retry Eq. 3), with the Layer-B variable mapping of
+DESIGN.md §2B:
+
+  flash mode       -> KV tier            (ids shared, core.modes)
+  P/E cycles       -> requantization events per page
+  retention time   -> page age in decode steps
+  read disturbs    -> accumulated attention mass ("reads")
+  RBER             -> relative dequant error of the tier
+  read retry count -> Eq.-3 correction-cost estimate from that error
+
+Differences from flash, stated plainly: quantization error is NOT
+recoverable by promotion (no ECC on lost bits), so the write-path commit
+decision (which tier a freshly filled page lands in) is heat-aware — the
+paper's read-triggered conversion then corrects mistakes in both
+directions. Elastic capacity recovery demotes cold pages under pool
+pressure exactly like Fig. 12.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hotness, modes, policy, retry
+from repro.kvcache import paged, quant
+
+
+@dataclass(frozen=True)
+class RAROConfig:
+    heat: hotness.HeatConfig = field(
+        default_factory=lambda: hotness.HeatConfig(decay=0.95, hot_thresh=0.08, warm_thresh=0.02)
+    )
+    r1: int = 1
+    r2: int = 5
+    # Layer-B stress scaling: map (requants, age, reads) onto the Eq.-1
+    # input ranges the flash constants were calibrated for.
+    cycles_per_requant: float = 120.0
+    hours_per_step: float = 0.05
+    reads_scale: float = 40.0
+    enabled: bool = True  # False -> static tiers (baseline)
+
+
+def page_retry_estimate(c: paged.TieredKV, rcfg: RAROConfig):
+    """Eq.(1) -> Eq.(3) per logical page, using its tier as the mode."""
+    tier = jnp.maximum(c.tier, modes.SLC)
+    cycles = c.requants.astype(jnp.float32) * rcfg.cycles_per_requant
+    age_h = (c.step - c.born).astype(jnp.float32) * rcfg.hours_per_step
+    reads = c.reads * rcfg.reads_scale
+    page_ids = jnp.arange(c.tier.size, dtype=jnp.int32).reshape(c.tier.shape)
+    n = retry.page_retries(tier, cycles, age_h, reads, page_ids)
+    return jnp.where(c.tier >= 0, n, 0)
+
+
+def update_stats(c: paged.TieredKV, masses, rcfg: RAROConfig):
+    """Fold one decode step's per-page attention masses (B, MaxP) into the
+    hotness/reads metadata."""
+    hot = hotness.decay_heat(c.hot, rcfg.heat) + masses
+    return c._replace(hot=hot, reads=c.reads + masses)
+
+
+def commit_tier(c: paged.TieredKV, cfg: paged.CacheConfig, rcfg: RAROConfig):
+    """Write-path decision: tier for the page each sequence commits next.
+
+    Uses the hotness of the sequence's most recent committed page as the
+    predictor (hot sequences keep attending their recent context)."""
+    if not rcfg.enabled:
+        return jnp.full((cfg.n_seqs,), modes.TIER_INT4, jnp.int32)
+    last = jnp.maximum(c.seq_len // cfg.page_size - 1, 0)
+    bidx = jnp.arange(cfg.n_seqs)
+    h = c.hot[bidx, last]
+    cls = hotness.classify(h, rcfg.heat)
+    return jnp.where(
+        cls == modes.HOT,
+        modes.TIER_BF16,
+        jnp.where(cls == modes.WARM, modes.TIER_INT8, modes.TIER_INT4),
+    ).astype(jnp.int32)
+
+
+def _move_pages(c: paged.TieredKV, cfg: paged.CacheConfig, sel_b, sel_p, tgt: int):
+    """Migrate up to M logical pages (sel_b/sel_p, -1-padded) to tier tgt."""
+    b_safe = jnp.maximum(sel_b, 0)
+    p_safe = jnp.maximum(sel_p, 0)
+    cur_tier = c.tier[b_safe, p_safe]
+    cur_slot = c.slot[b_safe, p_safe]
+    ok = (sel_b >= 0) & (cur_tier >= 0) & (cur_tier != tgt)
+
+    kpage, vpage = paged._load_page(c, jnp.where(ok, cur_tier, -1), cur_slot)
+
+    free = list(c.free)
+    slots, free[tgt] = paged._alloc(free[tgt], ok)
+    moved = ok & (slots >= 0)
+
+    pools = (c.k16, c.v16, c.k8, c.v8, c.sk8, c.sv8, c.k4, c.v4, c.sk4, c.sv4)
+    pools = paged._store_page(pools, tgt, jnp.where(moved, slots, -1), kpage, vpage)
+
+    # release source slots
+    for t in range(3):
+        rel = moved & (cur_tier == t)
+        n = free[t].shape[0]
+        free[t] = free[t].at[jnp.where(rel, cur_slot, n)].set(True, mode="drop")
+
+    B = cfg.n_seqs
+    at = (jnp.where(moved, b_safe, B), p_safe)
+    tier_tab = c.tier.at[at].set(tgt, mode="drop")
+    slot_tab = c.slot.at[at].set(slots, mode="drop")
+    requants = c.requants.at[at].add(0 if tgt == modes.TIER_BF16 else 1, mode="drop")
+    # conversion resets the page's stress clock (fresh program, Fig. 8)
+    born = c.born.at[at].set(c.step, mode="drop")
+    reads = c.reads.at[at].set(0.0, mode="drop")
+
+    (k16, v16, k8, v8, sk8, sv8, k4, v4, sk4, sv4) = pools
+    return c._replace(
+        k16=k16, v16=v16, k8=k8, v8=v8, sk8=sk8, sv8=sv8, k4=k4, v4=v4,
+        sk4=sk4, sv4=sv4, tier=tier_tab, slot=slot_tab, free=tuple(free),
+        requants=requants, born=born, reads=reads,
+    ), moved.sum()
+
+
+def _topk_pages(score, m):
+    """Top-m (b, p) indices of a (B, MaxP) score; -1 where score = -inf."""
+    b, mp = score.shape
+    flat = score.reshape(-1)
+    v, i = jax.lax.top_k(flat, m)
+    ok = v > -jnp.inf
+    return jnp.where(ok, i // mp, -1), jnp.where(ok, i % mp, -1)
+
+
+def raro_step(c: paged.TieredKV, cfg: paged.CacheConfig, rcfg: RAROConfig, masses):
+    """One controller invocation between decode steps (paper Fig. 11):
+    1. heat classifier   2. RBER/retry estimate   3. Table-II migration,
+    plus elastic capacity recovery under pool pressure."""
+    c = update_stats(c, masses, rcfg)
+    if not rcfg.enabled:
+        return c, {}
+
+    retries = page_retry_estimate(c, rcfg)
+    cls = hotness.classify(c.hot, rcfg.heat)
+    th = policy.Thresholds(jnp.int32(rcfg.r1), jnp.int32(rcfg.r2))
+    tier = jnp.where(c.tier >= 0, c.tier, modes.SLC)  # invalid pages -> SLC (never migrates)
+    target = policy.migration_decision(tier, cls, retries, th)
+    target = jnp.where(c.tier >= 0, target, c.tier)
+
+    stats = {}
+    m = cfg.migrate_per_step
+    for tgt in (modes.TIER_BF16, modes.TIER_INT8):
+        trig = (c.tier >= 0) & (target == tgt) & (c.tier > tgt)
+        score = jnp.where(trig, c.hot, -jnp.inf)
+        sb, sp = _topk_pages(score, m)
+        c, n = _move_pages(c, cfg, sb, sp, tgt)
+        stats[f"promoted_to_{modes.TIER_NAMES[tgt]}"] = n
+
+    # ---- elastic capacity recovery (Fig. 12): demote cold pages under
+    # pool pressure, one density level at a time ----
+    occ = paged.pool_occupancy(c)
+    for src in (modes.TIER_BF16, modes.TIER_INT8):
+        pressure = occ[src] > cfg.high_watermark
+        cold = (c.tier == src) & (cls == modes.COLD)
+        score = jnp.where(cold & pressure, -c.hot, -jnp.inf)
+        sb, sp = _topk_pages(score, m)
+        c, n = _move_pages(c, cfg, sb, sp, src + 1)
+        stats[f"demoted_from_{modes.TIER_NAMES[src]}"] = n
+    return c, stats

@@ -1,0 +1,322 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes — 16x16 (single pod, 256 chips) and 2x16x16
+(2 pods, 512 chips) — against ShapeDtypeStruct inputs (zero allocation).
+
+Per cell we record memory_analysis, cost_analysis (FLOPs/bytes) and the
+post-SPMD collective table (op kind, payload bytes, whether it sits inside
+the layer-scan while body) into results/dryrun/<mesh>/<arch>__<shape>.json,
+which §Roofline consumes.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh single|multi|both] [--force]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models import base, registry
+from repro.parallel import sharding
+from repro.serving import serve_step as ss
+from repro.training import optim
+from repro.training import train_step as ts
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_COLL_RE = re.compile(
+    r"(\w+[\d.\-]*)\s*=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\(",
+)
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8, "s32": 4,
+    "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+_CALL_RE = re.compile(r"(?:calls=|to_apply=)%([\w.\-]+)")
+_WHILE_RE = re.compile(r"while\([^)]*\), condition=%([\w.\-]+), body=%([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def parse_collectives(hlo_text: str) -> list[dict]:
+    """Collective ops from post-partitioning HLO with correct loop
+    multipliers: build the computation call graph, read each while loop's
+    trip count from its condition's s32 constant, and multiply collective
+    payloads by the product of enclosing trip counts."""
+    # 1. split into computations
+    comps: dict[str, list[str]] = {}
+    cur = ""
+    for line in hlo_text.splitlines():
+        if not line.startswith(" ") and ("{" in line):
+            head = line.split(" ")[0].lstrip("%")
+            if head == "ENTRY":
+                head = line.split(" ")[1].lstrip("%")
+            cur = head
+            comps[cur] = []
+        elif cur:
+            comps[cur].append(line)
+        if line.startswith("ENTRY"):
+            cur = line.split(" ")[1].split("(")[0].lstrip("%")
+            comps[cur] = []
+
+    # 2. edges: (caller -> callee, multiplier)
+    trip_of_body: dict[str, int] = {}
+    edges: dict[str, list[tuple[str, int]]] = {c: [] for c in comps}
+    for name, lines in comps.items():
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trip = 1
+                for cl in comps.get(cond, []):
+                    for c in _CONST_RE.findall(cl):
+                        trip = max(trip, int(c))
+                trip_of_body[body] = trip
+                edges[name].append((body, trip))
+                edges[name].append((cond, trip))
+            for callee in _CALL_RE.findall(line):
+                edges[name].append((callee, 1))
+
+    # 3. propagate multipliers from roots (computations never called)
+    called = {c for outs in edges.values() for c, _ in outs}
+    mult: dict[str, int] = {c: 1 for c in comps if c not in called}
+    frontier = list(mult)
+    while frontier:
+        nxt = []
+        for c in frontier:
+            for callee, k in edges.get(c, []):
+                m = mult[c] * k
+                if m > mult.get(callee, 0):
+                    mult[callee] = m
+                    nxt.append(callee)
+        frontier = nxt
+
+    # 4. collect collectives with their computation's multiplier
+    out = []
+    for name, lines in comps.items():
+        m = mult.get(name, 1)
+        for line in lines:
+            for cm in _COLL_RE.finditer(line):
+                dtype, dims, kind = cm.group(2), cm.group(3), cm.group(4)
+                n = 1
+                for d in dims.split(","):
+                    if d.strip():
+                        n *= int(d)
+                out.append({
+                    "kind": kind,
+                    "bytes": n * _DTYPE_BYTES.get(dtype, 4),
+                    "mult": m,
+                })
+    return out
+
+
+def _tree_bytes(tree) -> int:
+    import numpy as np
+
+    return int(
+        sum(np.prod(x.shape) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+VARIANTS = ("seq_shard", "xent_chunk", "moe_hints", "kv8", "kv4")
+
+
+def _chunk_for(txt_len: int) -> int:
+    for c in (2048, 1920, 1536, 1280, 1024, 960, 768, 640, 512, 384, 256, 128):
+        if txt_len % c == 0:
+            return c
+    return 0
+
+
+def apply_variants(cfg, shape, variants: tuple[str, ...]):
+    """§Perf iteration knobs -> config overrides (recorded per cell)."""
+    ov = {}
+    seq_shard = "seq_shard" in variants
+    if "xent_chunk" in variants and shape.kind == "train":
+        n_txt = shape.seq_len - (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+        c = _chunk_for(n_txt)
+        if c:
+            ov["xent_chunk"] = c
+    if "moe_hints" in variants and cfg.n_experts:
+        ov["moe_hints"] = True
+    if "kv8" in variants and cfg.family in ("dense", "vlm") and shape.kind == "decode":
+        ov["kv_bits"] = 8
+    if "kv4" in variants and cfg.family in ("dense", "vlm") and shape.kind == "decode":
+        ov["kv_bits"] = 4
+    return cfg.with_(**ov) if ov else cfg, ov, seq_shard
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+               variants: tuple[str, ...] = ()):
+    shape = SHAPES[shape_name]
+    cfg, overrides, seq_shard = apply_variants(ARCHS[arch], shape, variants)
+    api = registry.get_api(cfg)
+    specs = api.specs()
+    params_abs = base.abstract(specs)
+    p_shard = sharding.param_shardings(cfg, specs, mesh)
+    inputs = registry.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        ocfg = optim.AdamWConfig()
+        o_specs = optim.opt_state_specs(specs)
+        o_abs = base.abstract(o_specs)
+        o_shard = base.param_shardings(o_specs, mesh, sharding.make_rules(cfg, mesh))
+        b_shard = sharding.batch_shardings(cfg, inputs, mesh)
+        step = ts.make_train_step(cfg, ocfg)
+        fn = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1),
+        )
+        args = (params_abs, o_abs, inputs)
+    elif shape.kind == "prefill":
+        b_shard = sharding.batch_shardings(cfg, inputs, mesh)
+        fn = jax.jit(ss.make_prefill(cfg), in_shardings=(p_shard, b_shard))
+        args = (params_abs, inputs)
+    else:  # decode
+        cache_abs = inputs["cache"]
+        c_shard = sharding.cache_shardings(cfg, cache_abs, mesh, seq_shard=seq_shard)
+        tok_shard = sharding.batch_shardings(
+            cfg, {"tokens": inputs["tokens"], "pos": inputs["pos"]}, mesh
+        )
+        fn = jax.jit(
+            ss.make_serve_step(cfg),
+            in_shardings=(p_shard, c_shard, tok_shard["tokens"], tok_shard["pos"]),
+            out_shardings=(None, c_shard),
+            donate_argnums=(1,),
+        )
+        args = (params_abs, cache_abs, inputs["tokens"], inputs["pos"])
+
+    with jax.set_mesh(mesh):
+        t0 = time.time()
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_size_in_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_in_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_in_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_in_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not support it
+        mem_d = {"error": str(e)}
+    try:
+        cost = dict(compiled.cost_analysis() or {})
+        cost = {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))}
+    except Exception as e:
+        cost = {"error": str(e)}
+
+    colls = parse_collectives(compiled.as_text())
+    agg: dict[str, dict] = {}
+    for c in colls:
+        a = agg.setdefault(c["kind"], {"count": 0, "bytes_total": 0, "bytes_once": 0})
+        a["count"] += 1
+        a["bytes_once"] += c["bytes"]  # static payload, no loop multiplier
+        a["bytes_total"] += c["bytes"] * c["mult"]  # executed payload per step
+
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "variants": list(variants),
+        "overrides": {k: v for k, v in overrides.items()},
+        "seq_shard": seq_shard,
+        "devices": int(len(mesh.devices.ravel())),
+        "n_layers": cfg.n_layers,
+        "family": cfg.family,
+        "param_bytes_global": _tree_bytes(params_abs),
+        "input_bytes_global": _tree_bytes(args[1] if shape.kind == "train" else args[-2]),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_d,
+        "cost_analysis": cost,
+        "collectives": agg,
+        "status": "ok",
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="", help="comma list of perf knobs: "
+                    "seq_shard,xent_chunk,moe_hints,kv8,kv4")
+    args = ap.parse_args()
+    variants = tuple(v for v in args.variant.split(",") if v)
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    n_ok = n_skip = n_fail = 0
+    for mesh_name, mesh in meshes:
+        suffix = ("__" + "_".join(variants)) if variants else ""
+        outdir = RESULTS / (mesh_name + suffix)
+        outdir.mkdir(parents=True, exist_ok=True)
+        for arch, cfg in ARCHS.items():
+            if args.arch and arch != args.arch:
+                continue
+            for shape_name in SHAPES:
+                if args.shape and shape_name != args.shape:
+                    continue
+                ok, why = applicable(cfg.family, SHAPES[shape_name])
+                out = outdir / f"{arch}__{shape_name}.json"
+                if not ok:
+                    out.write_text(json.dumps(
+                        {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                         "status": "skipped", "reason": why}, indent=1))
+                    n_skip += 1
+                    print(f"[skip] {mesh_name} {arch} {shape_name}: {why}", flush=True)
+                    continue
+                if out.exists() and not args.force:
+                    prev = json.loads(out.read_text())
+                    if prev.get("status") == "ok":
+                        n_ok += 1
+                        print(f"[cached] {mesh_name} {arch} {shape_name}", flush=True)
+                        continue
+                t0 = time.time()
+                try:
+                    rec = lower_cell(arch, shape_name, mesh, mesh_name, variants)
+                    n_ok += 1
+                    print(
+                        f"[ok] {mesh_name} {arch} {shape_name} "
+                        f"lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                        f"flops={rec['cost_analysis'].get('flops')}", flush=True,
+                    )
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                           "status": "fail", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:],
+                           "elapsed_s": round(time.time() - t0, 1)}
+                    n_fail += 1
+                    print(f"[FAIL] {mesh_name} {arch} {shape_name}: {type(e).__name__}: {e}",
+                          flush=True)
+                out.write_text(json.dumps(rec, indent=1))
+    print(f"dry-run done: ok={n_ok} skipped={n_skip} failed={n_fail}", flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

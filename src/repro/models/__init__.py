@@ -1,0 +1,1 @@
+# Composable model zoo: one module per family, configs select architectures.

@@ -1,0 +1,132 @@
+"""Attention primitives.
+
+``blockwise_attention`` is a pure-jnp flash-attention (online softmax over KV
+blocks via lax.scan) so 32k-token prefill never materializes an (S, S) score
+matrix; it is also the numerical oracle for the Pallas flash kernel
+(kernels/flash_attention). ``decode_attention`` is the single-token path over
+a (possibly windowed) KV cache; its Pallas counterpart is
+kernels/tiered_attention, which adds in-kernel dequantization of RARO KV
+tiers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def _gqa_split(q, n_kv: int):
+    """(B, S, H, D) -> (B, S, Hk, G, D) with G = H // Hk."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, q_offset=0, kv_len=None,
+                        window: int = 0, block: int = 1024):
+    """Online-softmax attention.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, Hk, D); H % Hk == 0.
+    q_offset: absolute position of q[0] (for causal masking during decode /
+      chunked prefill). kv_len: (B,) valid cache length mask. window > 0
+      restricts attention to the last ``window`` positions (sliding window).
+    Returns (B, Sq, H, D).
+    """
+    b, sq, h, d = q.shape
+    _, sk, hk, _ = k.shape
+    g = h // hk
+    block = min(block, sk)
+    n_blocks = -(-sk // block)
+    pad = n_blocks * block - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qg = _gqa_split(q, hk).astype(jnp.float32) * (d**-0.5)  # (B,Sq,Hk,G,D)
+    q_pos = q_offset + jnp.arange(sq)
+
+    kb = k.reshape(b, n_blocks, block, hk, d)
+    vb = v.reshape(b, n_blocks, block, hk, v.shape[-1])
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kj, vj, j = xs
+        kj = kj.astype(jnp.float32)
+        # scores: (B, Sq, Hk, G, block)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kj)
+        k_pos = j * block + jnp.arange(block)
+        mask = jnp.ones((sq, block), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        mask &= (k_pos < sk - pad)[None, :]
+        if kv_len is not None:
+            mask = mask[None] & (k_pos[None, None, :] < kv_len[:, None, None])
+            s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+        else:
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, vj.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    dv = v.shape[-1]  # v head dim may differ from k (MLA)
+    m0 = jnp.full((b, sq, hk, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, hk, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, hk, g, dv), jnp.float32)
+    (m, l, acc), _ = lax.scan(
+        body,
+        (m0, l0, a0),
+        (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4), jnp.arange(n_blocks)),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
+    """One-token attention over the cache.
+
+    q: (B, 1, H, D); caches: (B, S, Hk, D); cache_len: (B,) — entries at
+    positions >= cache_len are masked (the cache may be partially filled).
+    """
+    b, _, h, d = q.shape
+    _, s, hk, _ = k_cache.shape
+    qg = _gqa_split(q, hk).astype(jnp.float32) * (d**-0.5)
+    scores = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k_cache.astype(jnp.float32))
+    k_pos = jnp.arange(s)
+    mask = k_pos[None, :] < cache_len[:, None]
+    if window:
+        mask &= k_pos[None, :] >= cache_len[:, None] - window
+    scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, v_cache.shape[-1]).astype(q.dtype)
+
+
+def reference_attention(q, k, v, *, causal: bool, q_offset=0, kv_len=None, window: int = 0):
+    """Naive O(S^2) oracle for tests."""
+    b, sq, h, d = q.shape
+    _, sk, hk, _ = k.shape
+    qg = _gqa_split(q, hk).astype(jnp.float32) * (d**-0.5)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k.astype(jnp.float32))
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    mask = jnp.broadcast_to(mask[None], (b, sq, sk))
+    if kv_len is not None:
+        mask &= k_pos[None, None, :] < kv_len[:, None, None]
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)

@@ -1,0 +1,127 @@
+"""Parameter-spec infrastructure.
+
+Models declare parameters as pytrees of :class:`ParamSpec` (shape + logical
+axes + initializer). From one spec tree we derive:
+
+  * real parameters        (``materialize`` — tests/examples)
+  * abstract parameters    (``abstract`` — multi-pod dry-run, no allocation)
+  * shardings              (``named_sharding`` — logical->mesh axis rules)
+
+so the dry-run never allocates a byte and sharding rules live in one place.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis names, len == len(shape)
+    init: str = "normal"  # normal | zeros | ones | scaled (fan-in)
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _tree_map(f, tree):
+    return jax.tree_util.tree_map(f, tree, is_leaf=is_spec)
+
+
+def materialize(specs, key, dtype=None):
+    """Instantiate real parameters (tests, examples, small-scale training)."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def init_one(spec: ParamSpec, k):
+        dt = dtype or spec.dtype
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dt)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dt)
+        scale = 1.0
+        if spec.init == "scaled" and len(spec.shape) >= 2:
+            scale = 1.0 / np.sqrt(spec.shape[-2])
+        elif spec.init == "normal":
+            scale = 0.02
+        return (jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(dt)
+
+    out = [init_one(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract(specs, dtype=None):
+    """ShapeDtypeStruct stand-ins — what the dry-run lowers against."""
+    return _tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype or s.dtype), specs
+    )
+
+
+def n_params(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis -> mesh-axis rules.
+# ---------------------------------------------------------------------------
+
+# Default TP/EP mapping: tensor dims that scale with the model shard over
+# "model"; everything else is replicated (data/pod axes shard activations,
+# optimizer ZeRO sharding is layered on separately in training/optim.py).
+DEFAULT_RULES: dict[str, str | None] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "experts": "model",
+    "embed": None,
+    "layers": None,
+    "conv": None,
+    "state": None,
+    None: None,
+}
+
+
+def spec_partition(spec: ParamSpec, rules: dict, mesh) -> P:
+    """PartitionSpec for one param, with divisibility fallback to replicate."""
+    out = []
+    for dim, ax in zip(spec.shape, spec.axes):
+        mesh_ax = rules.get(ax, None)
+        if mesh_ax is not None and dim % mesh.shape[mesh_ax] == 0:
+            out.append(mesh_ax)
+        else:
+            out.append(None)
+    # GSPMD forbids the same mesh axis twice in one spec; keep the first.
+    seen = set()
+    cleaned = []
+    for ax in out:
+        if ax is not None and ax in seen:
+            cleaned.append(None)
+        else:
+            cleaned.append(ax)
+            if ax is not None:
+                seen.add(ax)
+    return P(*cleaned)
+
+
+def param_shardings(specs, mesh, rules: dict | None = None):
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    return _tree_map(lambda s: NamedSharding(mesh, spec_partition(s, rules, mesh)), specs)
+
+
+def param_pspecs(specs, mesh, rules: dict | None = None):
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    return _tree_map(lambda s: spec_partition(s, rules, mesh), specs)

@@ -1,0 +1,169 @@
+"""Zamba2-style hybrid: Mamba2 backbone with a SHARED attention+MLP block
+applied every ``attn_every`` layers (arXiv:2411.15242).
+
+Long-context (long_500k) runs with sliding-window attention on the shared
+block (cfg.window), so the whole model stays sub-quadratic: Mamba2 state is
+O(1), attention cost is O(window) per token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models import transformer as T
+from repro.models.base import ParamSpec
+
+
+def n_apps(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+
+
+def specs(cfg: ModelConfig) -> dict:
+    s = {
+        "embed": L.embedding_specs(cfg.vocab, cfg.d_model),
+        "mamba_layers": T.stack_specs(cfg.n_layers, ssm.mamba2_specs(cfg)),
+        "ln_f": T.norm_specs(cfg),
+    }
+    if cfg.attn_every:
+        s["shared"] = {
+            "ln1": T.norm_specs(cfg),
+            "attn": T.attn_specs(cfg),
+            "ln2": T.norm_specs(cfg),
+            "mlp": L.mlp_specs(cfg.d_model, cfg.d_ff, gated=True),
+        }
+    return s
+
+
+def init_cache_specs(cfg: ModelConfig, batch: int, seq_len: int):
+    out = {"mamba": T.stack_specs(cfg.n_layers, ssm.mamba2_state_specs(cfg, batch))}
+    if cfg.attn_every:
+        w = T.cache_len(cfg, seq_len)
+        hk, dh = cfg.n_kv_heads, cfg.head_dim
+        kv = ParamSpec((n_apps(cfg), batch, w, hk, dh),
+                       (None, None, None, "kv_heads", None), "zeros", cfg.dtype)
+        out.update({"k": kv, "v": kv})
+    return out
+
+
+def _segments(cfg: ModelConfig):
+    """(start, length, has_attn) per segment: attn fires after each full
+    ``attn_every`` mamba layers; a shorter tail has no attn."""
+    k = cfg.attn_every or cfg.n_layers
+    segs = []
+    i = 0
+    while i < cfg.n_layers:
+        ln = min(k, cfg.n_layers - i)
+        segs.append((i, ln, bool(cfg.attn_every) and ln == k))
+        i += ln
+    return segs
+
+
+def _slice_tree(tree, start, length):
+    return jax.tree_util.tree_map(lambda a: a[start : start + length], tree)
+
+
+def _mamba_scan(params_slice, x, cfg, states_slice):
+    def body(x, xs):
+        lp, st = xs
+        y, st2 = ssm.mamba2_apply(lp, x, cfg, st)
+        return x + y, st2
+
+    return lax.scan(body, x, (params_slice, states_slice))
+
+
+def _zeros_states(cfg, batch, length):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        T.stack_specs(length, ssm.mamba2_state_specs(cfg, batch)),
+        is_leaf=lambda z: hasattr(z, "init"),
+    )
+
+
+def forward(params, batch, cfg: ModelConfig):
+    x = L.embed(params["embed"], batch["tokens"]).astype(cfg.dtype)
+    positions = jnp.arange(x.shape[1])
+    b = x.shape[0]
+    for start, length, has_attn in _segments(cfg):
+        x, _ = _mamba_scan(_slice_tree(params["mamba_layers"], start, length),
+                           x, cfg, _zeros_states(cfg, b, length))
+        if has_attn:
+            sp = params["shared"]
+            x = x + T.attn_block(sp["attn"], T.norm(cfg, sp["ln1"], x), cfg,
+                                 positions, window=cfg.window)
+            x = x + L.mlp(sp["mlp"], T.norm(cfg, sp["ln2"], x), cfg.act)
+    return T.norm(cfg, params["ln_f"], x)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    x = forward(params, batch, cfg)
+    logits = L.lm_logits(params["embed"], x, cfg.vocab)
+    return L.softmax_xent(logits, batch["labels"])
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    x = L.embed(params["embed"], batch["tokens"]).astype(cfg.dtype)
+    positions = jnp.arange(x.shape[1])
+    b, s = x.shape[:2]
+    w = T.cache_len(cfg, s)
+    m_states, ks, vs = [], [], []
+    app = 0
+    for start, length, has_attn in _segments(cfg):
+        x, st = _mamba_scan(_slice_tree(params["mamba_layers"], start, length),
+                            x, cfg, _zeros_states(cfg, b, length))
+        m_states.append(st)
+        if has_attn:
+            sp = params["shared"]
+            xn = T.norm(cfg, sp["ln1"], x)
+            q, k, v = T.qkv(sp["attn"], xn, cfg, positions)
+            o = attn.blockwise_attention(q, k, v, causal=True, window=cfg.window)
+            x = x + o.reshape(b, s, -1) @ sp["attn"]["wo"]
+            x = x + L.mlp(sp["mlp"], T.norm(cfg, sp["ln2"], x), cfg.act)
+            ks.append(k[:, -w:])
+            vs.append(v[:, -w:])
+            app += 1
+    x = T.norm(cfg, params["ln_f"], x)
+    logits = L.lm_logits(params["embed"], x[:, -1:], cfg.vocab)
+    cache = {"mamba": jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs, 0), *m_states)}
+    if ks:
+        cache["k"] = jnp.stack(ks)
+        cache["v"] = jnp.stack(vs)
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    b = tokens.shape[0]
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    bidx = jnp.arange(b)
+    new_m, new_k, new_v = [], [], []
+    app = 0
+    for start, length, has_attn in _segments(cfg):
+        x, st = _mamba_scan(_slice_tree(params["mamba_layers"], start, length),
+                            x, cfg, _slice_tree(cache["mamba"], start, length))
+        new_m.append(st)
+        if has_attn:
+            sp = params["shared"]
+            kc, vc = cache["k"][app], cache["v"][app]
+            s_cache = kc.shape[1]
+            widx = pos % s_cache
+            xn = T.norm(cfg, sp["ln1"], x)
+            q, k, v = T.qkv(sp["attn"], xn, cfg, pos[:, None])
+            kc = kc.at[bidx, widx].set(k[:, 0])
+            vc = vc.at[bidx, widx].set(v[:, 0])
+            o = attn.decode_attention(q, kc, vc, jnp.minimum(pos + 1, s_cache))
+            x = x + o.reshape(b, 1, -1) @ sp["attn"]["wo"]
+            x = x + L.mlp(sp["mlp"], T.norm(cfg, sp["ln2"], x), cfg.act)
+            new_k.append(kc)
+            new_v.append(vc)
+            app += 1
+    x = T.norm(cfg, params["ln_f"], x)
+    cache_out = {"mamba": jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs, 0), *new_m)}
+    if new_k:
+        cache_out["k"] = jnp.stack(new_k)
+        cache_out["v"] = jnp.stack(new_v)
+    return L.lm_logits(params["embed"], x, cfg.vocab), cache_out

@@ -1,0 +1,157 @@
+"""Shared layer primitives: norms, rotary embeddings, MLPs, embeddings.
+
+All functions are pure; parameters come in as dict pytrees produced by the
+matching ``*_specs`` functions (see base.ParamSpec).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.base import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm_specs(d: int) -> dict:
+    return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * p["scale"]
+
+
+def layernorm_specs(d: int) -> dict:
+    return {
+        "scale": ParamSpec((d,), ("embed",), init="ones"),
+        "bias": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(dt) * p["scale"] + p["bias"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_freqs(d_head: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal(positions, d: int):
+    half = d // 2
+    freqs = np.exp(-np.log(10000.0) * np.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def mlp_specs(d: int, f: int, gated: bool = True) -> dict:
+    s = {
+        "w_in": ParamSpec((d, f), ("embed", "ff"), init="scaled"),
+        "w_out": ParamSpec((f, d), ("ff", "embed"), init="scaled"),
+    }
+    if gated:
+        s["w_gate"] = ParamSpec((d, f), ("embed", "ff"), init="scaled")
+    return s
+
+
+def mlp(p, x, act: str = "silu"):
+    h = x @ p["w_in"]
+    if "w_gate" in p:
+        g = x @ p["w_gate"]
+        h = h * (jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g))
+    else:
+        h = jax.nn.silu(h) if act == "silu" else jax.nn.gelu(h)
+    return h @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head (padded vocab for clean vocab-parallel sharding)
+# ---------------------------------------------------------------------------
+def padded_vocab(vocab: int, multiple: int = 256) -> int:
+    return -(-vocab // multiple) * multiple
+
+
+def embedding_specs(vocab: int, d: int) -> dict:
+    return {"table": ParamSpec((padded_vocab(vocab), d), ("vocab", "embed"))}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def lm_logits(p, x, true_vocab: int):
+    """Tied-embedding head; padded tail masked to -inf for the loss."""
+    logits = x @ p["table"].T
+    pad = logits.shape[-1] - true_vocab
+    if pad:
+        mask = jnp.concatenate(
+            [jnp.zeros((true_vocab,), logits.dtype), jnp.full((pad,), -1e9, logits.dtype)]
+        )
+        logits = logits + mask
+    return logits
+
+
+def tied_xent_chunked(embed_params, x, labels, true_vocab: int, chunk: int):
+    """Sequence-chunked tied-embedding cross-entropy (§Perf iteration 2).
+
+    The naive path materializes (B, S, V) f32 logits (+ their gradient) —
+    at 4k x 32k-vocab that alone is ~2x 8.4 GiB per device. Scanning over
+    sequence chunks with rematerialization caps the live logits at
+    (B, chunk, V); the backward pass recomputes each chunk's logits.
+    """
+    b, s, d = x.shape
+    n = s // chunk
+    assert n * chunk == s, (s, chunk)
+    xs = x.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xsl):
+        xc, lc = xsl
+        logits = lm_logits(embed_params, xc, true_vocab).astype(jnp.float32)
+        mask = lc != -1
+        lab = jnp.maximum(lc, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        loss, cnt = carry
+        return (loss + ((lse - ll) * mask).sum(), cnt + mask.sum()), None
+
+    (loss, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.int32(0)), (xs, ls))
+    return loss / jnp.maximum(cnt, 1)
+
+
+def softmax_xent(logits, labels, ignore: int = -1):
+    """Token-mean cross entropy in f32; ``ignore`` labels are masked."""
+    logits = logits.astype(jnp.float32)
+    mask = labels != ignore
+    lab = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+    loss = (lse - ll) * mask
+    return loss.sum() / jnp.maximum(mask.sum(), 1)

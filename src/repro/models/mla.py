@@ -1,0 +1,113 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Train/prefill run the explicit (decompressed) form; decode runs the
+*absorbed* form — q is projected into the KV latent space so attention
+contracts directly against the cached compressed latents. The cache is
+(c_kv, k_rope): kv_lora_rank + rope_head_dim floats per position instead of
+2 * H * d_head — this latent page is exactly what the RARO KV tiers manage
+for deepseek-v3 (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models.base import ParamSpec
+
+
+def mla_specs(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    ql, kl = cfg.q_lora_rank, cfg.kv_lora_rank
+    return {
+        "wq_a": ParamSpec((d, ql), ("embed", None), "scaled"),
+        "q_ln": L.rmsnorm_specs(ql),
+        "wq_b": ParamSpec((ql, h * (dn + dr)), (None, "heads"), "scaled"),
+        "wkv_a": ParamSpec((d, kl + dr), ("embed", None), "scaled"),
+        "kv_ln": L.rmsnorm_specs(kl),
+        "wkv_b": ParamSpec((kl, h * (dn + dv)), (None, "heads"), "scaled"),
+        "wo": ParamSpec((h * dv, d), ("heads", "embed"), "scaled"),
+    }
+
+
+def _project_q(p, x, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr = cfg.nope_head_dim, cfg.rope_head_dim
+    q = L.rmsnorm(p["q_ln"], x @ p["wq_a"]) @ p["wq_b"]
+    q = q.reshape(b, s, h, dn + dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+    qr = L.apply_rope(qr, positions, cfg.rope_theta)
+    return qn, qr
+
+
+def _project_kv_latent(p, x, cfg: ModelConfig, positions):
+    """x -> (c_kv normalized (B,S,KL), k_rope roped (B,S,DR))."""
+    kl, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+    kv_a = x @ p["wkv_a"]
+    ckv = L.rmsnorm(p["kv_ln"], kv_a[..., :kl])
+    kr = kv_a[..., kl:]
+    kr = L.apply_rope(kr[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return ckv, kr
+
+
+def mla_attention(p, x, cfg: ModelConfig, positions, return_cache: bool = False):
+    """Explicit-form MLA for train/prefill. Returns out [, (c_kv, k_rope)]."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+
+    qn, qr = _project_q(p, x, cfg, positions)
+    ckv, kr = _project_kv_latent(p, x, cfg, positions)
+
+    kv = (ckv @ p["wkv_b"]).reshape(b, s, h, dn + dv)
+    kn, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate([kn, jnp.broadcast_to(kr[:, :, None, :], (b, s, h, dr))], axis=-1)
+    q = jnp.concatenate([qn, qr], axis=-1)
+
+    o = attn.blockwise_attention(q, k, v, causal=True, window=cfg.window)
+    out = o.reshape(b, s, h * dv) @ p["wo"]
+    if return_cache:
+        return out, (ckv, kr)
+    return out
+
+
+def mla_decode(p, x, cfg: ModelConfig, pos, ckv_cache, kr_cache):
+    """Absorbed-form single-token decode.
+
+    x: (B,1,D); caches: (B,S,KL) and (B,S,DR). Returns (out, caches).
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    kl = cfg.kv_lora_rank
+    s_cache = ckv_cache.shape[1]
+    bidx = jnp.arange(b)
+    widx = pos % s_cache
+
+    qn, qr = _project_q(p, x, cfg, pos[:, None])
+    ckv_new, kr_new = _project_kv_latent(p, x, cfg, pos[:, None])
+    ckv_cache = ckv_cache.at[bidx, widx].set(ckv_new[:, 0])
+    kr_cache = kr_cache.at[bidx, widx].set(kr_new[:, 0])
+
+    w_b = p["wkv_b"].reshape(kl, h, dn + dv)
+    w_uk, w_uv = w_b[..., :dn], w_b[..., dn:]
+
+    q_lat = jnp.einsum("bqhd,lhd->bqhl", qn.astype(jnp.float32), w_uk.astype(jnp.float32))
+    scores = jnp.einsum("bqhl,bkl->bqhk", q_lat, ckv_cache.astype(jnp.float32))
+    scores += jnp.einsum("bqhd,bkd->bqhk", qr.astype(jnp.float32), kr_cache.astype(jnp.float32))
+    scores *= (dn + dr) ** -0.5
+
+    k_pos = jnp.arange(s_cache)
+    mask = k_pos[None, :] < jnp.minimum(pos + 1, s_cache)[:, None]
+    scores = jnp.where(mask[:, None, None, :], scores, attn.NEG_INF)
+    probs = jnp.exp(scores - scores.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+
+    ctx = jnp.einsum("bqhk,bkl->bqhl", probs, ckv_cache.astype(jnp.float32))
+    o = jnp.einsum("bqhl,lhd->bqhd", ctx, w_uv.astype(jnp.float32)).astype(x.dtype)
+    out = o.reshape(b, 1, h * dv) @ p["wo"]
+    return out, ckv_cache, kr_cache

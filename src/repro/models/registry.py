@@ -1,0 +1,71 @@
+"""Model registry: family dispatch + abstract input specs per shape cell."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import base, encdec, hybrid, moe, transformer, xlstm
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    specs: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache_specs: Callable
+
+
+_FAMILIES = {
+    "dense": transformer,
+    "vlm": transformer,
+    "moe": moe,
+    "encdec": encdec,
+    "ssm": xlstm,
+    "hybrid": hybrid,
+}
+
+
+def get_api(cfg: ModelConfig) -> ModelAPI:
+    mod = _FAMILIES[cfg.family]
+    return ModelAPI(
+        cfg=cfg,
+        specs=lambda: mod.specs(cfg),
+        loss_fn=lambda p, b: mod.loss_fn(p, b, cfg),
+        prefill=lambda p, b: mod.prefill(p, b, cfg),
+        decode_step=lambda p, c, t, pos: mod.decode_step(p, c, t, pos, cfg),
+        init_cache_specs=lambda batch, seq: mod.init_cache_specs(cfg, batch, seq),
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell —
+    weak-type-correct, shardable, zero allocation (dry-run contract)."""
+    i32 = jnp.int32
+    gb, s = shape.global_batch, shape.seq_len
+
+    if shape.kind in ("train", "prefill"):
+        n_txt = s - cfg.n_img_tokens if cfg.family == "vlm" else s
+        batch = {"tokens": jax.ShapeDtypeStruct((gb, n_txt), i32)}
+        if shape.kind == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((gb, n_txt), i32)
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct((gb, cfg.enc_len, cfg.d_model), cfg.dtype)
+        if cfg.family == "vlm":
+            batch["img_embeds"] = jax.ShapeDtypeStruct((gb, cfg.n_img_tokens, cfg.d_model), cfg.dtype)
+        return batch
+
+    # decode: one new token against a seq_len-deep cache
+    api = get_api(cfg)
+    cache = base.abstract(api.init_cache_specs(gb, s))
+    return {
+        "tokens": jax.ShapeDtypeStruct((gb, 1), i32),
+        "pos": jax.ShapeDtypeStruct((gb,), i32),
+        "cache": cache,
+    }

@@ -1,0 +1,279 @@
+"""Recurrent sequence mixers: xLSTM (mLSTM + sLSTM blocks) and Mamba2.
+
+All recurrences run as lax.scan over the sequence (O(S) state, no
+attention) — these are the sub-quadratic archs that serve the long_500k
+shape. Decode is a single scan step over carried state; there is no KV
+cache, so the RARO tiering technique is inapplicable here (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.base import ParamSpec
+
+
+def _causal_depthwise_conv(x, w, state=None):
+    """x: (B,S,C); w: (K,C) depthwise causal. state: (B,K-1,C) carry-in.
+
+    Returns (y (B,S,C), new_state (B,K-1,C))."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k))
+    return y, xp[:, -(k - 1) :] if k > 1 else state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block)
+# ---------------------------------------------------------------------------
+def mlstm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.expand * d
+    h = cfg.n_heads
+    return {
+        "ln": L.rmsnorm_specs(d),
+        "w_up": ParamSpec((d, 2 * di), ("embed", "ff"), "scaled"),
+        "conv": ParamSpec((cfg.d_conv, di), ("conv", None), "normal"),
+        "wq": ParamSpec((di, di), ("ff", None), "scaled"),
+        "wk": ParamSpec((di, di), ("ff", None), "scaled"),
+        "wv": ParamSpec((di, di), ("ff", None), "scaled"),
+        "w_if": ParamSpec((d, 2 * h), ("embed", None), "scaled", jnp.float32),
+        "b_if": ParamSpec((2 * h,), (None,), "zeros", jnp.float32),
+        "gn": ParamSpec((di,), ("ff",), "ones"),
+        "w_down": ParamSpec((di, d), ("ff", "embed"), "scaled"),
+    }
+
+
+def mlstm_state_specs(cfg: ModelConfig, batch: int) -> dict:
+    di = cfg.expand * cfg.d_model
+    h = cfg.n_heads
+    dh = di // h
+    return {
+        "C": ParamSpec((batch, h, dh, dh), (None, "heads", None, None), "zeros", jnp.float32),
+        "n": ParamSpec((batch, h, dh), (None, "heads", None), "zeros", jnp.float32),
+        "m": ParamSpec((batch, h), (None, "heads"), "zeros", jnp.float32),
+        "conv": ParamSpec((batch, cfg.d_conv - 1, di), (None, None, "ff"), "zeros", cfg.dtype),
+    }
+
+
+def _mlstm_cell(qkvif, state):
+    """One step. q,k,v: (B,H,Dh); i_raw,f_raw: (B,H)."""
+    q, k, v, i_raw, f_raw = qkvif
+    C, n, m = state
+    dh = q.shape[-1]
+    log_f = -jax.nn.softplus(-f_raw)  # log sigmoid
+    m_new = jnp.maximum(log_f + m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)[..., None]
+    f_g = jnp.exp(log_f + m - m_new)[..., None]
+    k_s = k.astype(jnp.float32) * (dh**-0.5)
+    C = f_g[..., None] * C + i_g[..., None] * (v.astype(jnp.float32)[..., :, None] * k_s[..., None, :])
+    n = f_g * n + i_g * k_s
+    hn = jnp.einsum("bhvk,bhk->bhv", C, q.astype(jnp.float32))
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q.astype(jnp.float32))), 1.0)
+    h_out = hn / denom[..., None]
+    return h_out, (C, n, m_new)
+
+
+def mlstm_apply(p, x, cfg: ModelConfig, state=None):
+    """x: (B,S,D). Returns (y, new_state)."""
+    b, s, d = x.shape
+    di = cfg.expand * d
+    h = cfg.n_heads
+    dh = di // h
+    xn = L.rmsnorm(p["ln"], x)
+    up = xn @ p["w_up"]
+    u, z = up[..., :di], up[..., di:]
+    conv_state = None if state is None else state["conv"]
+    uc, conv_new = _causal_depthwise_conv(u, p["conv"], conv_state)
+    uc = jax.nn.silu(uc)
+    q = (uc @ p["wq"]).reshape(b, s, h, dh)
+    k = (uc @ p["wk"]).reshape(b, s, h, dh)
+    v = (u @ p["wv"]).reshape(b, s, h, dh)
+    gates = xn.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    i_raw, f_raw = gates[..., :h], gates[..., h:]
+
+    if state is None:
+        C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.zeros((b, h), jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def step(carry, xs):
+        h_out, carry = _mlstm_cell(xs, carry)
+        return carry, h_out
+
+    xs = (
+        q.transpose(1, 0, 2, 3),
+        k.transpose(1, 0, 2, 3),
+        v.transpose(1, 0, 2, 3),
+        i_raw.transpose(1, 0, 2),
+        f_raw.transpose(1, 0, 2),
+    )
+    (C, n, m), hs = lax.scan(step, (C0, n0, m0), xs)
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, s, di).astype(x.dtype)
+    # per-head group norm + output gate
+    hs = hs.reshape(b, s, h, dh)
+    mu = hs.mean(-1, keepdims=True)
+    var = jnp.var(hs, axis=-1, keepdims=True)
+    hs = ((hs - mu) * lax.rsqrt(var + 1e-6)).reshape(b, s, di) * p["gn"]
+    y = (hs * jax.nn.silu(z)) @ p["w_down"]
+    new_state = {"C": C, "n": n, "m": m, "conv": conv_new}
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory block)
+# ---------------------------------------------------------------------------
+def slstm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    return {
+        "ln": L.rmsnorm_specs(d),
+        "w": ParamSpec((d, 4 * d), ("embed", "ff"), "scaled"),
+        "r": ParamSpec((h, dh, 4 * dh), ("heads", None, None), "scaled"),
+        "b": ParamSpec((4 * d,), (None,), "zeros", jnp.float32),
+        "gn": ParamSpec((d,), ("embed",), "ones"),
+        "w_down": ParamSpec((d, d), ("embed", "embed"), "scaled"),
+    }
+
+
+def slstm_state_specs(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    return {
+        "c": ParamSpec((batch, d), (None, "embed"), "zeros", jnp.float32),
+        "n2": ParamSpec((batch, d), (None, "embed"), "zeros", jnp.float32),
+        "m2": ParamSpec((batch, d), (None, "embed"), "zeros", jnp.float32),
+        "h": ParamSpec((batch, d), (None, "embed"), "zeros", jnp.float32),
+    }
+
+
+def slstm_apply(p, x, cfg: ModelConfig, state=None):
+    b, s, d = x.shape
+    h_heads = cfg.n_heads
+    dh = d // h_heads
+    xn = L.rmsnorm(p["ln"], x)
+    wx = xn @ p["w"]  # (B,S,4d)
+
+    if state is None:
+        c0 = jnp.zeros((b, d), jnp.float32)
+        n0 = jnp.zeros((b, d), jnp.float32)
+        m0 = jnp.full((b, d), 0.0, jnp.float32)
+        h0 = jnp.zeros((b, d), jnp.float32)
+    else:
+        c0, n0, m0, h0 = state["c"], state["n2"], state["m2"], state["h"]
+
+    def step(carry, wx_t):
+        c, n, m, h_prev = carry
+        hp = h_prev.reshape(b, h_heads, dh)
+        rec = jnp.einsum("bhd,hde->bhe", hp, p["r"].astype(jnp.float32)).reshape(b, 4 * d)
+        g = wx_t.astype(jnp.float32) + rec + p["b"]
+        i_raw, f_raw, z_raw, o_raw = jnp.split(g, 4, axis=-1)
+        log_f = -jax.nn.softplus(-f_raw)
+        m_new = jnp.maximum(log_f + m, i_raw)
+        i_g = jnp.exp(i_raw - m_new)
+        f_g = jnp.exp(log_f + m - m_new)
+        c_new = f_g * c + i_g * jnp.tanh(z_raw)
+        n_new = f_g * n + i_g
+        h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    (c, n, m, h_last), hs = lax.scan(step, (c0, n0, m0, h0), wx.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2).astype(x.dtype)
+    mu = hs.reshape(b, s, h_heads, dh).mean(-1, keepdims=True)
+    var = jnp.var(hs.reshape(b, s, h_heads, dh), axis=-1, keepdims=True)
+    hs = ((hs.reshape(b, s, h_heads, dh) - mu) * lax.rsqrt(var + 1e-6)).reshape(b, s, d)
+    y = (hs * p["gn"]) @ p["w_down"]
+    return y, {"c": c, "n2": n, "m2": m, "h": h_last}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD scalar-A recurrence) — zamba2 backbone
+# ---------------------------------------------------------------------------
+def mamba2_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.expand * d
+    n = cfg.d_state
+    h = max(di // 64, 1)  # P = 64 head channels
+    return {
+        "ln": L.rmsnorm_specs(d),
+        "in_proj": ParamSpec((d, 2 * di + 2 * n + h), ("embed", "ff"), "scaled"),
+        "conv": ParamSpec((cfg.d_conv, di + 2 * n), ("conv", None), "normal"),
+        "a_log": ParamSpec((h,), (None,), "zeros", jnp.float32),
+        "dt_bias": ParamSpec((h,), (None,), "zeros", jnp.float32),
+        "d_skip": ParamSpec((h,), (None,), "ones", jnp.float32),
+        "gn": ParamSpec((di,), ("ff",), "ones"),
+        "out_proj": ParamSpec((di, d), ("ff", "embed"), "scaled"),
+    }
+
+
+def mamba2_state_specs(cfg: ModelConfig, batch: int) -> dict:
+    di = cfg.expand * cfg.d_model
+    h = max(di // 64, 1)
+    p = di // h
+    return {
+        "S": ParamSpec((batch, h, p, cfg.d_state), (None, None, None, None), "zeros", jnp.float32),
+        "conv": ParamSpec((batch, cfg.d_conv - 1, di + 2 * cfg.d_state),
+                          (None, None, None), "zeros", cfg.dtype),
+    }
+
+
+def mamba2_apply(p, x, cfg: ModelConfig, state=None):
+    b, s, d = x.shape
+    di = cfg.expand * d
+    n = cfg.d_state
+    h = max(di // 64, 1)
+    ph = di // h
+    xn = L.rmsnorm(p["ln"], x)
+    proj = xn @ p["in_proj"]
+    z, xin, dt_raw = proj[..., :di], proj[..., di : 2 * di], proj[..., 2 * di + 2 * n :]
+    bc = proj[..., 2 * di : 2 * di + 2 * n]
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    conv_out, conv_new = _causal_depthwise_conv(conv_in, p["conv"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xc = conv_out[..., :di].reshape(b, s, h, ph)
+    bmat = conv_out[..., di : di + n]
+    cmat = conv_out[..., di + n :]
+
+    a = -jnp.exp(p["a_log"])  # (H,)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+
+    S0 = (
+        jnp.zeros((b, h, ph, n), jnp.float32) if state is None else state["S"]
+    )
+
+    def step(S, xs):
+        xt, bt, ct, dtt = xs  # (B,H,P), (B,N), (B,N), (B,H)
+        decay = jnp.exp(a * dtt)[..., None, None]  # (B,H,1,1)
+        S = decay * S + (dtt[..., None] * xt.astype(jnp.float32))[..., None] * bt[
+            :, None, None, :
+        ].astype(jnp.float32)
+        y = jnp.einsum("bhpn,bn->bhp", S, ct.astype(jnp.float32))
+        return S, y
+
+    S, ys = lax.scan(
+        step,
+        S0,
+        (
+            xc.transpose(1, 0, 2, 3),
+            bmat.transpose(1, 0, 2),
+            cmat.transpose(1, 0, 2),
+            dt.transpose(1, 0, 2),
+        ),
+    )
+    y = ys.transpose(1, 0, 2, 3)  # (B,S,H,P)
+    y = y + p["d_skip"][:, None] * xc.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    mu = y.reshape(b, s, h, ph).mean(-1, keepdims=True)
+    var = jnp.var(y.reshape(b, s, h, ph), axis=-1, keepdims=True)
+    y = ((y.reshape(b, s, h, ph) - mu) * lax.rsqrt(var + 1e-6)).reshape(b, s, di)
+    y = (y * p["gn"] * jax.nn.silu(z)) @ p["out_proj"]
+    return y, {"S": S, "conv": conv_new}

@@ -1,0 +1,249 @@
+"""Dense decoder-only transformer family (llama-arch): deepseek-7b, yi-6b,
+tinyllama-1.1b, qwen1.5-110b (QKV bias), and the internvl2 LM backbone
+(family="vlm": precomputed patch embeddings are prepended to the sequence).
+
+Layers are scanned with stacked parameters so the lowered HLO is O(1 layer)
+— essential for 80-layer models on 512-device dry-run compiles.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models.base import ParamSpec
+
+
+def norm_specs(cfg: ModelConfig):
+    return L.rmsnorm_specs(cfg.d_model) if cfg.norm == "rmsnorm" else L.layernorm_specs(cfg.d_model)
+
+
+def norm(cfg: ModelConfig, p, x):
+    return L.rmsnorm(p, x) if cfg.norm == "rmsnorm" else L.layernorm(p, x)
+
+
+def attn_specs(cfg: ModelConfig) -> dict:
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = {
+        "wq": ParamSpec((d, h * dh), ("embed", "heads"), "scaled"),
+        "wk": ParamSpec((d, hk * dh), ("embed", "kv_heads"), "scaled"),
+        "wv": ParamSpec((d, hk * dh), ("embed", "kv_heads"), "scaled"),
+        "wo": ParamSpec((h * dh, d), ("heads", "embed"), "scaled"),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((h * dh,), ("heads",), "zeros")
+        s["bk"] = ParamSpec((hk * dh,), ("kv_heads",), "zeros")
+        s["bv"] = ParamSpec((hk * dh,), ("kv_heads",), "zeros")
+    return s
+
+
+def qkv(p, x, cfg: ModelConfig, positions, rope: bool = True):
+    b, s, _ = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"] + p["bq"] if "bq" in p else x @ p["wq"]).reshape(b, s, h, dh)
+    k = (x @ p["wk"] + p["bk"] if "bk" in p else x @ p["wk"]).reshape(b, s, hk, dh)
+    v = (x @ p["wv"] + p["bv"] if "bv" in p else x @ p["wv"]).reshape(b, s, hk, dh)
+    if rope:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_block(p, x, cfg: ModelConfig, positions, *, causal=True, window=0):
+    b, s, _ = x.shape
+    q, k, v = qkv(p, x, cfg, positions)
+    o = attn.blockwise_attention(q, k, v, causal=causal, window=window)
+    return o.reshape(b, s, -1) @ p["wo"]
+
+
+def layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": norm_specs(cfg),
+        "attn": attn_specs(cfg),
+        "ln2": norm_specs(cfg),
+        "mlp": L.mlp_specs(cfg.d_model, cfg.d_ff, gated=cfg.act == "silu"),
+    }
+
+
+def stack_specs(n: int, tree):
+    """Prepend a scanned 'layers' axis to every ParamSpec in the tree."""
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init, s.dtype),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def specs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": L.embedding_specs(cfg.vocab, cfg.d_model),
+        "layers": stack_specs(cfg.n_layers, layer_specs(cfg)),
+        "ln_f": norm_specs(cfg),
+    }
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    x = L.embed(params["embed"], batch["tokens"]).astype(cfg.dtype)
+    if cfg.family == "vlm" and "img_embeds" in batch:
+        x = jnp.concatenate([batch["img_embeds"].astype(cfg.dtype), x], axis=1)
+    return x
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Full-sequence forward -> final hidden states (B, S, D)."""
+    x = _embed_inputs(params, batch, cfg)
+    positions = jnp.arange(x.shape[1])
+
+    def layer(x, lp):
+        h = x + attn_block(lp["attn"], norm(cfg, lp["ln1"], x), cfg, positions,
+                           window=cfg.window)
+        h = h + L.mlp(lp["mlp"], norm(cfg, lp["ln2"], h), cfg.act)
+        return h, None
+
+    body = jax.checkpoint(layer) if cfg.remat else layer
+    x, _ = lax.scan(body, x, params["layers"])
+    return norm(cfg, params["ln_f"], x)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    x = forward(params, batch, cfg)
+    labels = batch["labels"]
+    if cfg.family == "vlm" and "img_embeds" in batch:
+        n_img = batch["img_embeds"].shape[1]
+        x = x[:, n_img:]
+    if cfg.xent_chunk:
+        return L.tied_xent_chunked(params["embed"], x, labels, cfg.vocab, cfg.xent_chunk)
+    logits = L.lm_logits(params["embed"], x, cfg.vocab)
+    return L.softmax_xent(logits, labels)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode over a KV cache
+# ---------------------------------------------------------------------------
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    return min(seq_len, cfg.window) if cfg.window else seq_len
+
+
+# --- RARO dense-tier quantized KV (§Perf iteration: kv_bits = 8 / 4) ------
+def _kv_qmax(bits: int) -> float:
+    return 127.0 if bits == 8 else 7.0
+
+
+def quant_kv(x, bits: int):
+    """x: (..., dh) -> (q int8 (packed for 4-bit), scale (...,) f32)."""
+    x32 = x.astype(jnp.float32)
+    qmax = _kv_qmax(bits)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32), axis=-1), 1e-8) / qmax
+    q = jnp.clip(jnp.round(x32 / scale[..., None]), -qmax, qmax).astype(jnp.int8)
+    if bits == 4:
+        q = (q[..., 0::2] & 0x0F) | ((q[..., 1::2] & 0x0F) << 4)
+    return q.astype(jnp.int8), scale
+
+
+def dequant_kv(q, scale, bits: int, dtype):
+    if bits == 4:
+        lo = ((q & 0x0F) ^ 0x08) - 0x08
+        hi = q >> 4
+        q = jnp.stack([lo, hi], axis=-1).reshape(*q.shape[:-1], 2 * q.shape[-1])
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def init_cache_specs(cfg: ModelConfig, batch: int, seq_len: int):
+    s = cache_len(cfg, seq_len)
+    hk, dh = cfg.n_kv_heads, cfg.head_dim
+    if cfg.kv_bits == 16:
+        kv = ParamSpec((cfg.n_layers, batch, s, hk, dh),
+                       ("layers", None, None, "kv_heads", None), "zeros", cfg.dtype)
+        return {"k": kv, "v": kv}
+    dhq = dh if cfg.kv_bits == 8 else dh // 2
+    kv = ParamSpec((cfg.n_layers, batch, s, hk, dhq),
+                   ("layers", None, None, "kv_heads", None), "zeros", jnp.int8)
+    sc = ParamSpec((cfg.n_layers, batch, s, hk),
+                   ("layers", None, None, "kv_heads"), "ones", jnp.float32)
+    return {"k": kv, "v": kv, "k_scale": sc, "v_scale": sc}
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    """Full-sequence pass that also materializes the KV cache.
+
+    Returns (last-position logits, cache dict).
+    """
+    x = _embed_inputs(params, batch, cfg)
+    positions = jnp.arange(x.shape[1])
+
+    def layer(x, lp):
+        xn = norm(cfg, lp["ln1"], x)
+        q, k, v = qkv(lp["attn"], xn, cfg, positions)
+        o = attn.blockwise_attention(q, k, v, causal=True, window=cfg.window)
+        h = x + o.reshape(x.shape[0], x.shape[1], -1) @ lp["attn"]["wo"]
+        h = h + L.mlp(lp["mlp"], norm(cfg, lp["ln2"], h), cfg.act)
+        return h, (k, v)
+
+    x, (ks, vs) = lax.scan(layer, x, params["layers"])
+    x = norm(cfg, params["ln_f"], x)
+    logits = L.lm_logits(params["embed"], x[:, -1:], cfg.vocab)
+    w = cache_len(cfg, x.shape[1])
+    ks, vs = ks[:, :, -w:], vs[:, :, -w:]
+    if cfg.kv_bits == 16:
+        return logits, {"k": ks, "v": vs}
+    qk, sk = quant_kv(ks, cfg.kv_bits)
+    qv, sv = quant_kv(vs, cfg.kv_bits)
+    return logits, {"k": qk, "v": qv, "k_scale": sk, "v_scale": sv}
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    """One decode step. tokens: (B, 1); pos: (B,) absolute positions.
+
+    The cache write index is ``pos % cache_size`` (rolling buffer, which for
+    window archs implements the sliding window exactly). With kv_bits < 16
+    the cache holds int8/packed-int4 pages + per-token scales (the RARO
+    dense tier); reads dequantize on the fly.
+    """
+    b = tokens.shape[0]
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    s_cache = cache["k"].shape[2]
+    widx = pos % s_cache
+    bidx = jnp.arange(b)
+    quant = cfg.kv_bits < 16
+
+    def layer(x, xs):
+        if quant:
+            lp, kc, vc, ksc, vsc = xs
+        else:
+            lp, kc, vc = xs
+        xn = norm(cfg, lp["ln1"], x)
+        q, k, v = qkv(lp["attn"], xn, cfg, pos[:, None])
+        if quant:
+            qk, sk = quant_kv(k[:, 0], cfg.kv_bits)
+            qv, sv = quant_kv(v[:, 0], cfg.kv_bits)
+            kc = kc.at[bidx, widx].set(qk)
+            vc = vc.at[bidx, widx].set(qv)
+            ksc = ksc.at[bidx, widx].set(sk)
+            vsc = vsc.at[bidx, widx].set(sv)
+            k_full = dequant_kv(kc, ksc, cfg.kv_bits, cfg.dtype)
+            v_full = dequant_kv(vc, vsc, cfg.kv_bits, cfg.dtype)
+        else:
+            kc = kc.at[bidx, widx].set(k[:, 0])
+            vc = vc.at[bidx, widx].set(v[:, 0])
+            k_full, v_full = kc, vc
+        o = attn.decode_attention(q, k_full, v_full, jnp.minimum(pos + 1, s_cache))
+        h = x + o.reshape(b, 1, -1) @ lp["attn"]["wo"]
+        h = h + L.mlp(lp["mlp"], norm(cfg, lp["ln2"], h), cfg.act)
+        return h, (kc, vc, ksc, vsc) if quant else (kc, vc)
+
+    if quant:
+        x, (ks, vs, kss, vss) = lax.scan(
+            layer, x,
+            (params["layers"], cache["k"], cache["v"], cache["k_scale"], cache["v_scale"]),
+        )
+        new_cache = {"k": ks, "v": vs, "k_scale": kss, "v_scale": vss}
+    else:
+        x, (ks, vs) = lax.scan(layer, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs}
+    x = norm(cfg, params["ln_f"], x)
+    logits = L.lm_logits(params["embed"], x, cfg.vocab)
+    return logits, new_cache

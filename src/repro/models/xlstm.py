@@ -1,0 +1,112 @@
+"""xLSTM language model (sLSTM + mLSTM blocks, arXiv:2405.04517).
+
+Every ``slstm_every``-th block is sLSTM, the rest mLSTM. Attention-free:
+decode state is O(1) per layer; there is no KV cache and the RARO tiering
+technique is inapplicable (DESIGN.md §5 Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models import transformer as T
+
+
+def _is_slstm(cfg: ModelConfig, idx):
+    if not cfg.slstm_every:
+        return jnp.zeros_like(idx, bool) if hasattr(idx, "shape") else False
+    return (idx % cfg.slstm_every) == (cfg.slstm_every - 1)
+
+
+def specs(cfg: ModelConfig) -> dict:
+    layer = {"mlstm": ssm.mlstm_specs(cfg), "slstm": ssm.slstm_specs(cfg)}
+    return {
+        "embed": L.embedding_specs(cfg.vocab, cfg.d_model),
+        "layers": T.stack_specs(cfg.n_layers, layer),
+        "ln_f": T.norm_specs(cfg),
+    }
+
+
+def init_cache_specs(cfg: ModelConfig, batch: int, seq_len: int):
+    m = T.stack_specs(cfg.n_layers, ssm.mlstm_state_specs(cfg, batch))
+    s = T.stack_specs(cfg.n_layers, ssm.slstm_state_specs(cfg, batch))
+    return {"mlstm": m, "slstm": s}
+
+
+def _layer(cfg, lp, x, mstate, sstate):
+    """One block with optional carried state; returns (y, mstate', sstate')."""
+
+    def do_m(ops):
+        x, ms, ss = ops
+        y, ms2 = ssm.mlstm_apply(lp["mlstm"], x, cfg, ms)
+        return y, ms2, ss
+
+    def do_s(ops):
+        x, ms, ss = ops
+        y, ss2 = ssm.slstm_apply(lp["slstm"], x, cfg, ss)
+        return y, ms, ss2
+
+    return do_m, do_s
+
+
+def _scan_layers(params, x, cfg: ModelConfig, cache=None):
+    n = cfg.n_layers
+    idxs = jnp.arange(n)
+    if cache is None:
+        b = x.shape[0]
+        cache = {
+            "mlstm": jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, s.dtype),
+                T.stack_specs(n, ssm.mlstm_state_specs(cfg, b)),
+                is_leaf=lambda z: hasattr(z, "init"),
+            ),
+            "slstm": jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, s.dtype),
+                T.stack_specs(n, ssm.slstm_state_specs(cfg, b)),
+                is_leaf=lambda z: hasattr(z, "init"),
+            ),
+        }
+
+    def body(x, xs):
+        lp, ms, ss, idx = xs
+        do_m, do_s = _layer(cfg, lp, x, ms, ss)
+        y, ms2, ss2 = lax.cond(_is_slstm(cfg, idx), do_s, do_m, (x, ms, ss))
+        return x + y, (ms2, ss2)
+
+    x, (ms_all, ss_all) = lax.scan(
+        body, x, (params["layers"], cache["mlstm"], cache["slstm"], idxs)
+    )
+    return x, {"mlstm": ms_all, "slstm": ss_all}
+
+
+def forward(params, batch, cfg: ModelConfig):
+    x = L.embed(params["embed"], batch["tokens"]).astype(cfg.dtype)
+    x, _ = _scan_layers(params, x, cfg)
+    return T.norm(cfg, params["ln_f"], x)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    x = forward(params, batch, cfg)
+    logits = L.lm_logits(params["embed"], x, cfg.vocab)
+    return L.softmax_xent(logits, batch["labels"])
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    x = L.embed(params["embed"], batch["tokens"]).astype(cfg.dtype)
+    x, cache = _scan_layers(params, x, cfg)
+    x = T.norm(cfg, params["ln_f"], x)
+    logits = L.lm_logits(params["embed"], x[:, -1:], cfg.vocab)
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    del pos  # recurrent state carries position implicitly
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    x, cache = _scan_layers(params, x, cfg, cache)
+    x = T.norm(cfg, params["ln_f"], x)
+    return L.lm_logits(params["embed"], x, cfg.vocab), cache

@@ -1,0 +1,157 @@
+"""Sharding rules: logical axes -> mesh axes, per architecture.
+
+2D layout: ("data", "model") within a pod, plus an optional leading "pod"
+axis that composes with "data" for batch/gradient parallelism (the lowest-
+bandwidth axis carries the lowest-frequency collective — one gradient
+reduction per step).
+
+Every rule is divisibility-checked against the actual mesh (base.
+spec_partition falls back to replication per-dim), so one rule set serves
+every (arch x shape x mesh) cell; per-arch overrides below pick the better
+axis when the default is unshardable (e.g. granite's 40 experts on a
+16-way model axis -> shard the expert FFN width instead).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import base
+
+
+def data_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def tp_size(mesh) -> int:
+    return mesh.shape["model"]
+
+
+def make_rules(cfg: ModelConfig, mesh) -> dict:
+    tp = tp_size(mesh)
+    rules = dict(base.DEFAULT_RULES)
+    # GQA: shard KV projections over heads only when heads divide cleanly;
+    # otherwise replicate KV (queries stay head-sharded).
+    if cfg.n_kv_heads % tp != 0:
+        rules["kv_heads"] = None
+    if cfg.n_heads % tp != 0:
+        rules["heads"] = None
+    # MoE: expert-parallel when E % tp == 0, else tensor-parallel experts.
+    rules["moe_ff"] = None
+    if cfg.n_experts:
+        if cfg.n_experts % tp == 0:
+            rules["experts"] = "model"
+        else:
+            rules["experts"] = None
+            rules["moe_ff"] = "model"
+    # batch-like axes (inputs, caches)
+    rules["batch"] = data_axes(mesh)
+    rules["seq"] = None
+    return rules
+
+
+def param_shardings(cfg: ModelConfig, specs, mesh):
+    return base.param_shardings(specs, mesh, make_rules(cfg, mesh))
+
+
+def _spec_for(shape, axes, rules, mesh) -> P:
+    out = []
+    used = set()
+    for dim, ax in zip(shape, axes):
+        mesh_ax = rules.get(ax)
+        if mesh_ax is None:
+            out.append(None)
+            continue
+        if isinstance(mesh_ax, tuple):
+            size = 1
+            for a in mesh_ax:
+                size *= mesh.shape[a]
+        else:
+            size = mesh.shape[mesh_ax]
+        key = mesh_ax if isinstance(mesh_ax, str) else mesh_ax[0]
+        if dim % size == 0 and key not in used:
+            out.append(mesh_ax)
+            used.add(key)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# logical axes of the standard batch inputs
+_BATCH_AXES = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "frames": ("batch", "seq", None),
+    "img_embeds": ("batch", "seq", None),
+    "pos": ("batch",),
+}
+
+
+def batch_shardings(cfg: ModelConfig, batch_abstract, mesh):
+    """NamedShardings for a train/prefill batch dict or the decode inputs
+    (tokens/pos/cache)."""
+    rules = make_rules(cfg, mesh)
+
+    def shard_one(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        axes = _BATCH_AXES.get(name)
+        if axes is None:
+            axes = (None,) * len(x.shape)
+        return NamedSharding(mesh, _spec_for(x.shape, axes[: len(x.shape)], rules, mesh))
+
+    def walk(tree, in_cache=False):
+        out = {}
+        for k, v in tree.items():
+            if k == "cache":
+                out[k] = cache_shardings(cfg, v, mesh)
+            elif isinstance(v, dict):
+                out[k] = walk(v)
+            else:
+                axes = _BATCH_AXES.get(k, (None,) * len(v.shape))
+                out[k] = NamedSharding(mesh, _spec_for(v.shape, axes[: len(v.shape)], rules, mesh))
+        return out
+
+    return walk(batch_abstract)
+
+
+def cache_shardings(cfg: ModelConfig, cache_abstract, mesh, *, seq_shard: bool = False):
+    """KV/recurrent-state cache shardings: batch over data axes, kv heads
+    over model where divisible (falls back per-dim automatically).
+
+    seq_shard=True (§Perf iteration 1): when the KV-head dim cannot use the
+    model axis (GQA kv_heads < tp, or MLA's un-headed latent), shard the
+    cache SEQUENCE dim over "model" instead — flash-decoding-style split-K;
+    XLA turns the softmax reductions into small (B, H) collectives instead
+    of all-gathering the whole cache.
+    """
+    rules = make_rules(cfg, mesh)
+    tp = tp_size(mesh)
+
+    # We re-derive axes from shapes: dim 0 = layers/apps, dim 1 = batch, the
+    # dim matching n_kv_heads = kv_heads; for 4D (L,B,S,R) latent caches dim
+    # 2 is the sequence.
+    def one(x):
+        axes: list = []
+        for i, dim in enumerate(x.shape):
+            if i == 0 and len(x.shape) >= 3:
+                axes.append(None)  # layers / apps
+            elif (i == 1 and len(x.shape) >= 3) or (i == 0 and len(x.shape) < 3):
+                axes.append("batch")
+            elif dim == cfg.n_kv_heads and i >= 2:
+                axes.append("kv_heads")
+            elif cfg.family in ("ssm", "hybrid") and dim == cfg.n_heads and i >= 2:
+                axes.append("heads")
+            else:
+                axes.append(None)
+        spec = _spec_for(x.shape, tuple(axes), rules, mesh)
+        if seq_shard and "model" not in jax.tree_util.tree_leaves(spec) and len(x.shape) >= 4:
+            # no model-axis use -> shard the seq dim (index 2) if divisible
+            if x.shape[2] % tp == 0:
+                parts = list(spec) + [None] * (len(x.shape) - len(spec))
+                parts[2] = "model"
+                spec = P(*parts)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(one, cache_abstract)

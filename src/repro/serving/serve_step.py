@@ -1,0 +1,37 @@
+"""Serving steps: prefill + greedy/temperature decode over the model's KV
+cache. The decode_32k / long_500k dry-run cells lower ``serve_step`` (one
+new token against a seq_len-deep cache), per the assignment."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+
+
+def make_prefill(cfg: ModelConfig):
+    api = registry.get_api(cfg)
+
+    def prefill(params, batch):
+        logits, cache = api.prefill(params, batch)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig, temperature: float = 0.0):
+    api = registry.get_api(cfg)
+
+    def serve_step(params, cache, tokens, pos, rng=None):
+        logits, cache = api.decode_step(params, cache, tokens, pos)
+        logits = logits[:, -1].astype(jnp.float32)
+        if temperature > 0.0 and rng is not None:
+            next_tok = jax.random.categorical(rng, logits / temperature)
+        else:
+            next_tok = jnp.argmax(logits, axis=-1)
+        return next_tok.astype(jnp.int32), cache
+
+    return serve_step

@@ -1,0 +1,4 @@
+# FEMU-analogue vectorized flash-storage simulator (DESIGN.md §2A).
+from repro.ssdsim import engine, ftl, geometry, policies, state, workload  # noqa: F401
+
+__all__ = ["engine", "ftl", "geometry", "policies", "state", "workload"]

@@ -1,0 +1,281 @@
+"""FTL mechanics: block allocation, block-granularity migration/conversion
+(paper Fig. 8-10), greedy GC. Everything is jit-safe with static shapes;
+per-block operations work on the block's fixed slots_per_block window.
+
+Scatter discipline: masked-out lanes are redirected to an out-of-range index
+and dropped (``mode='drop'``) — never write a dummy in-range index, because
+duplicate-index ``set`` conflicts are unordered in XLA.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import modes, retry
+from repro.ssdsim import geometry, state as st
+
+# Max destination blocks one conversion can need: one partially-filled open
+# migration block plus ceil(1024/256) = 4 fresh SLC blocks.
+MAX_DEST = 5
+
+
+def alloc_free_block(s: st.SSDState, prefer_lun=None, cfg: geometry.SimConfig | None = None):
+    """Index of a free block (prefer matching LUN), or -1 if none."""
+    free = s.block_state == st.FREE
+    if prefer_lun is not None:
+        blk = jnp.arange(s.block_mode.shape[0], dtype=jnp.int32)
+        lun_match = (blk % cfg.n_luns) == prefer_lun
+        score = free.astype(jnp.int32) * 2 + (free & lun_match).astype(jnp.int32)
+    else:
+        score = free.astype(jnp.int32)
+    idx = jnp.argmax(score).astype(jnp.int32)
+    return jnp.where(score[idx] > 0, idx, -1)
+
+
+def free_block_count(s: st.SSDState):
+    return (s.block_state == st.FREE).sum()
+
+
+def _erase(s: st.SSDState, blk, cfg: geometry.SimConfig):
+    """Erase ``blk``: invalidate slots, bump P/E, return to free pool."""
+    spb = cfg.slots_per_block
+    mode = s.block_mode[blk]
+    p2l = lax.dynamic_update_slice(s.p2l, jnp.full((spb,), -1, jnp.int32), (blk * spb,))
+    lun = blk % cfg.n_luns
+    erase_ms = modes.ERASE_LATENCY_US[mode] / 1000.0
+    return s._replace(
+        p2l=p2l,
+        block_pe=s.block_pe.at[blk].add(1),
+        block_reads=s.block_reads.at[blk].set(0),
+        block_state=s.block_state.at[blk].set(st.FREE),
+        block_next=s.block_next.at[blk].set(0),
+        block_valid=s.block_valid.at[blk].set(0),
+        block_cold_age=s.block_cold_age.at[blk].set(0),
+        lun_busy_ms=s.lun_busy_ms.at[lun].add(erase_ms),
+        n_erases=s.n_erases + 1.0,
+    )
+
+
+def migrate_block(s: st.SSDState, src, tgt_mode, cfg: geometry.SimConfig):
+    """Move all valid pages of ``src`` into open migration block(s) of
+    ``tgt_mode``, then erase ``src``. This is both mode conversion
+    (tgt != src mode) and GC relocation (tgt == src mode).
+
+    Latency accounting: each valid page costs one source-mode read (with its
+    Eq.-3 retry count) plus one target-mode program; the erase costs the
+    source-mode erase latency. Requires up to MAX_DEST destination blocks;
+    the caller guards on free_block_count.
+    """
+    spb = cfg.slots_per_block
+    ppb = geometry.pages_per_block(cfg)
+    S = cfg.n_slots
+    L = cfg.n_logical
+
+    src_mode = s.block_mode[src]
+    slots = src * spb + jnp.arange(spb, dtype=jnp.int32)
+    lpns = lax.dynamic_slice(s.p2l, (src * spb,), (spb,))
+    valid = lpns >= 0
+    n_valid = valid.sum()
+
+    # -- read cost of the source pages (Eq. 1 -> Eq. 3 per page) --
+    age_h = (
+        cfg.device_age_h
+        + (s.clock_ms - lax.dynamic_slice(s.page_write_ms, (src * spb,), (spb,))) / 3.6e6
+    )
+    retries = retry.page_retries(src_mode, s.block_pe[src], age_h, s.block_reads[src], slots)
+    read_ms = jnp.where(valid, retry.read_latency_us(src_mode, retries), 0.0).sum() / 1000.0
+    src_lun = src % cfg.n_luns
+    s = s._replace(lun_busy_ms=s.lun_busy_ms.at[src_lun].add(read_ms))
+
+    # -- place pages into up to MAX_DEST destination blocks --
+    pos = jnp.cumsum(valid.astype(jnp.int32)) - 1  # rank of each valid page
+    consumed = jnp.int32(0)
+    for _ in range(MAX_DEST):
+        d = s.open_mig[tgt_mode]
+        a = alloc_free_block(s)
+        d = jnp.where(d < 0, a, d)
+        dd = jnp.maximum(d, 0)  # safe index; all writes masked when d < 0
+        usable = jnp.where(d >= 0, ppb[tgt_mode] - s.block_next[dd], 0)
+        take = jnp.clip(n_valid - consumed, 0, usable)
+        opened = (take > 0) & (d >= 0)
+        sel = valid & (pos >= consumed) & (pos < consumed + take) & opened
+
+        dest_off = s.block_next[dd] + (pos - consumed)
+        dest_slot = jnp.where(sel, dd * spb + dest_off, S)  # S = dropped
+        lp_idx = jnp.where(sel, lpns, L)  # L = dropped
+
+        s = s._replace(
+            block_mode=s.block_mode.at[dd].set(
+                jnp.where(opened, tgt_mode, s.block_mode[dd])
+            ),
+            block_state=s.block_state.at[dd].set(
+                jnp.where(opened, st.OPEN, s.block_state[dd])
+            ),
+        )
+        l2p = s.l2p.at[lp_idx].set(dest_slot, mode="drop")
+        p2l = s.p2l.at[dest_slot].set(lpns, mode="drop")
+        pwt = s.page_write_ms.at[dest_slot].set(s.clock_ms, mode="drop")
+
+        write_ms = take * modes.WRITE_LATENCY_US[tgt_mode] / 1000.0
+        d_lun = dd % cfg.n_luns
+        new_next = s.block_next[dd] + take
+        is_full = new_next >= ppb[tgt_mode]
+        s = s._replace(
+            l2p=l2p,
+            p2l=p2l,
+            page_write_ms=pwt,
+            block_next=s.block_next.at[dd].add(jnp.where(opened, take, 0)),
+            block_valid=s.block_valid.at[dd].add(jnp.where(opened, take, 0)),
+            block_state=s.block_state.at[dd].set(
+                jnp.where(opened & is_full, st.FULL, s.block_state.at[dd].get())
+            ),
+            open_mig=s.open_mig.at[tgt_mode].set(
+                jnp.where(
+                    opened,
+                    jnp.where(is_full, -1, d),
+                    s.open_mig[tgt_mode],
+                )
+            ),
+            lun_busy_ms=s.lun_busy_ms.at[d_lun].add(write_ms),
+        )
+        consumed = consumed + take
+
+    s = s._replace(
+        n_migrated_pages=s.n_migrated_pages + n_valid,
+        n_conversions=s.n_conversions.at[src_mode, tgt_mode].add(1.0),
+    )
+    return _erase(s, src, cfg)
+
+
+def _dest_unroll(cfg: geometry.SimConfig, n_pages: int) -> int:
+    """Destination blocks needed to place ``n_pages`` into the smallest-
+    capacity mode (SLC), plus one partially-filled open block."""
+    slc_ppb = max(cfg.slots_per_block // 4, 1)
+    return -(-n_pages // slc_ppb) + 1
+
+
+def migrate_pages(s: st.SSDState, lpns, tgt_mode, cfg: geometry.SimConfig):
+    """Page-granular conversion migration (paper Fig. 9/10): move the given
+    logical pages into open block(s) programmed in ``tgt_mode``, invalidating
+    their old slots. The destination block is the unit of mode uniformity
+    ("flash type alignment"); source blocks are compacted later by GC.
+
+    ``lpns``: (M,) int32, -1-padded. M is static (cfg.migrate_pages_per_chunk).
+    """
+    spb = cfg.slots_per_block
+    ppb = geometry.pages_per_block(cfg)
+    S, L = cfg.n_slots, cfg.n_logical
+    M = lpns.shape[0]
+
+    lp_safe = jnp.maximum(lpns, 0)
+    old_slot = s.l2p[lp_safe]
+    valid = (lpns >= 0) & (old_slot >= 0)
+    old_slot = jnp.where(valid, old_slot, 0)
+    src_blk = old_slot // spb
+    src_mode = s.block_mode[src_blk]
+    # don't "migrate" pages already in the target mode
+    valid &= src_mode != tgt_mode
+    n_valid = valid.sum()
+
+    # -- read cost of sources (each page is re-read to migrate) --
+    age_h = cfg.device_age_h + (s.clock_ms - s.page_write_ms[old_slot]) / 3.6e6
+    retries = retry.page_retries(src_mode, s.block_pe[src_blk], age_h, s.block_reads[src_blk], old_slot)
+    rd_ms = jnp.where(valid, retry.read_latency_us(src_mode, retries), 0.0) / 1000.0
+    lun_rd = jax.ops.segment_sum(rd_ms, src_blk % cfg.n_luns, num_segments=cfg.n_luns)
+    s = s._replace(lun_busy_ms=s.lun_busy_ms + lun_rd)
+
+    # -- invalidate old slots --
+    drop_slot = jnp.where(valid, old_slot, S)
+    p2l = s.p2l.at[drop_slot].set(-1, mode="drop")
+    bv = s.block_valid - jax.ops.segment_sum(valid.astype(jnp.int32), src_blk, num_segments=s.block_valid.shape[0])
+    s = s._replace(p2l=p2l, block_valid=bv)
+
+    # -- place into destination blocks of tgt_mode --
+    pos = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    consumed = jnp.int32(0)
+    for _ in range(_dest_unroll(cfg, M)):
+        d = s.open_mig[tgt_mode]
+        a = alloc_free_block(s)
+        d = jnp.where(d < 0, a, d)
+        dd = jnp.maximum(d, 0)
+        usable = jnp.where(d >= 0, ppb[tgt_mode] - s.block_next[dd], 0)
+        take = jnp.clip(n_valid - consumed, 0, usable)
+        opened = (take > 0) & (d >= 0)
+        sel = valid & (pos >= consumed) & (pos < consumed + take) & opened
+
+        dest_off = s.block_next[dd] + (pos - consumed)
+        dest_slot = jnp.where(sel, dd * spb + dest_off, S)
+        lp_idx = jnp.where(sel, lpns, L)
+
+        s = s._replace(
+            block_mode=s.block_mode.at[dd].set(jnp.where(opened, tgt_mode, s.block_mode[dd])),
+            block_state=s.block_state.at[dd].set(jnp.where(opened, st.OPEN, s.block_state[dd])),
+        )
+        l2p = s.l2p.at[lp_idx].set(dest_slot, mode="drop")
+        p2l = s.p2l.at[dest_slot].set(lp_safe, mode="drop")
+        pwt = s.page_write_ms.at[dest_slot].set(s.clock_ms, mode="drop")
+
+        write_ms = take * modes.WRITE_LATENCY_US[tgt_mode] / 1000.0
+        new_next = s.block_next[dd] + take
+        is_full = new_next >= ppb[tgt_mode]
+        s = s._replace(
+            l2p=l2p,
+            p2l=p2l,
+            page_write_ms=pwt,
+            block_next=s.block_next.at[dd].add(jnp.where(opened, take, 0)),
+            block_valid=s.block_valid.at[dd].add(jnp.where(opened, take, 0)),
+            block_state=s.block_state.at[dd].set(
+                jnp.where(opened & is_full, st.FULL, s.block_state.at[dd].get())
+            ),
+            open_mig=s.open_mig.at[tgt_mode].set(
+                jnp.where(opened, jnp.where(is_full, -1, d), s.open_mig[tgt_mode])
+            ),
+            lun_busy_ms=s.lun_busy_ms.at[dd % cfg.n_luns].add(write_ms),
+        )
+        consumed = consumed + take
+
+    conv = jax.ops.segment_sum(valid.astype(jnp.float32), src_mode, num_segments=3)
+    return s._replace(
+        n_migrated_pages=s.n_migrated_pages + n_valid,
+        n_conversions=s.n_conversions.at[:, tgt_mode].add(conv),
+    )
+
+
+def maybe_migrate_pages(s: st.SSDState, lpns, tgt_mode, cfg: geometry.SimConfig):
+    any_valid = (lpns >= 0).any()
+    ok = any_valid & (free_block_count(s) >= _dest_unroll(cfg, lpns.shape[0]) + 2)
+    return lax.cond(
+        ok,
+        lambda s_: migrate_pages(s_, lpns, tgt_mode, cfg),
+        lambda s_: s_,
+        s,
+    )
+
+
+def maybe_migrate_block(s: st.SSDState, src, tgt_mode, cfg: geometry.SimConfig):
+    """cond-wrapped migration: no-op when src < 0, the free pool cannot
+    cover MAX_DEST destinations, or the block is not FULL (converting a
+    block still being programmed would race the write path)."""
+    ok = (src >= 0) & (free_block_count(s) >= MAX_DEST + 2)
+    ok &= s.block_state[jnp.maximum(src, 0)] == st.FULL
+    return lax.cond(
+        ok,
+        lambda s_: migrate_block(s_, jnp.maximum(src, 0), tgt_mode, cfg),
+        lambda s_: s_,
+        s,
+    )
+
+
+def gc_step(s: st.SSDState, cfg: geometry.SimConfig):
+    """Greedy GC: relocate the FULL block with the fewest valid pages (and
+    at least one invalid page) when the free pool runs low."""
+    ppb = geometry.pages_per_block(cfg)
+    full = s.block_state == st.FULL
+    reclaimable = full & (s.block_valid < ppb[s.block_mode])
+    score = jnp.where(reclaimable, s.block_valid, jnp.iinfo(jnp.int32).max)
+    victim = jnp.argmin(score).astype(jnp.int32)
+    need = free_block_count(s) < cfg.gc_free_threshold
+    src = jnp.where(need & reclaimable[victim], victim, -1)
+    return maybe_migrate_block(s, src, s.block_mode[jnp.maximum(victim, 0)], cfg)

@@ -1,0 +1,106 @@
+"""Emulated-SSD geometry and simulation configuration (paper Table III).
+
+Default geometry: 2 channels x 2 LUNs/channel x 1 plane x 256 blocks/plane,
+16 KiB pages, 256/768/1024 pages per SLC/TLC/QLC block -> 16 GiB raw QLC
+capacity; the paper's working set is 8 GiB (524,288 logical pages).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+from repro.core import hotness, modes
+
+BASELINE = 0  # multi-read-retry QLC, no mode awareness
+HOTNESS = 1  # temperature-only 3-mode conversion (paper's comparison)
+RARO = 2  # this paper
+POLICY_NAMES = ("baseline", "hotness", "raro")
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    # --- Table III geometry ---
+    n_channels: int = 2
+    luns_per_channel: int = 2
+    planes_per_lun: int = 1
+    blocks_per_plane: int = 256
+    page_kib: int = 16
+    slots_per_block: int = 1024  # physical wordline slots == QLC page count
+
+    # --- workload footprint ---
+    n_logical: int = 524_288  # 8 GiB of 16 KiB pages
+
+    # --- engine ---
+    chunk: int = 1024  # requests per vectorized step (FTL background period)
+    migrate_pages_per_chunk: int = 128  # page-granular conversion budget/mode
+    max_conversions_per_chunk: int = 4  # block-granular ops (GC/reclaim)
+    gc_free_threshold: int = 8  # min free blocks before GC kicks in
+    device_age_h: float = 100.0  # retention baseline (pre-aged device)
+    channel_mb_s: float = 800.0  # ONFI channel bandwidth for page transfer
+
+    # --- policy ---
+    policy: int = RARO
+    r1: int = 1
+    r2_override: int = -1  # <0: use the paper's stage schedule (5/7/11)
+    heat: hotness.HeatConfig = field(default_factory=hotness.HeatConfig)
+    reclaim_enabled: bool = True
+
+    # --- initial wear (paper evaluates young/middle/old devices) ---
+    initial_pe: int = 166
+
+    @property
+    def n_luns(self) -> int:
+        return self.n_channels * self.luns_per_channel
+
+    @property
+    def n_blocks(self) -> int:
+        return self.n_luns * self.planes_per_lun * self.blocks_per_plane
+
+    @property
+    def n_slots(self) -> int:
+        return self.n_blocks * self.slots_per_block
+
+    @property
+    def page_bytes(self) -> int:
+        return self.page_kib * 1024
+
+    @property
+    def transfer_us(self) -> float:
+        """Channel transfer time of one page (16 KiB @ 800 MB/s ~= 20 us)."""
+        return self.page_bytes / (self.channel_mb_s * 1e6) * 1e6
+
+    def lun_of_block(self, block):
+        return block % self.n_luns
+
+    def channel_of_lun(self, lun):
+        return lun % self.n_channels
+
+    def with_policy(self, policy: int) -> "SimConfig":
+        return replace(self, policy=policy)
+
+
+def tiny_config(**kw) -> SimConfig:
+    """Small geometry for unit tests (fast on CPU)."""
+    base = dict(
+        n_channels=2,
+        luns_per_channel=2,
+        blocks_per_plane=16,
+        slots_per_block=64,
+        page_kib=16,
+        n_logical=1536,
+        chunk=128,
+        migrate_pages_per_chunk=16,
+        max_conversions_per_chunk=2,
+        gc_free_threshold=2,
+    )
+    base.update(kw)
+    return SimConfig(**base)
+
+
+# Pages per block if the block were opened in each mode, scaled to the
+# configured slots_per_block (Table III ratios 256:768:1024).
+def pages_per_block(cfg: SimConfig):
+    import jax.numpy as jnp
+
+    ratio = modes.PAGES_PER_BLOCK / modes.PAGES_PER_BLOCK[modes.QLC]
+    return jnp.maximum((ratio * cfg.slots_per_block).astype(jnp.int32), 1)

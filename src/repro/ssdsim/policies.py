@@ -1,0 +1,56 @@
+"""Per-chunk policy evaluation for the three schemes (paper §V-A):
+
+  BASELINE — multi-read-retry QLC, no mode awareness: never migrates.
+  HOTNESS  — temperature-only SLC-TLC-QLC conversion (comparison scheme).
+  RARO     — temperature AND Eq.-3 retry thresholds (Table II).
+
+The policies see exactly what the paper's FTL sees on the read path: the
+pages read in this chunk (the per-read trigger pipeline of Fig. 11,
+vectorized), and emit -1-padded lpn lists per target mode for
+``ftl.migrate_pages``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import hotness, modes, policy
+from repro.ssdsim import geometry
+
+
+def thresholds_for(cfg: geometry.SimConfig, pe_cycles):
+    if cfg.r2_override >= 0:
+        return policy.Thresholds(jnp.int32(cfg.r1), jnp.int32(cfg.r2_override))
+    th = policy.stage_thresholds(pe_cycles, r1=cfg.r1)
+    return th
+
+
+def select_migrations(cfg: geometry.SimConfig, uniq_lpns, page_mode, page_retries,
+                      page_heat, page_ok, pe_cycles):
+    """Select up to M pages per target mode to migrate this chunk.
+
+    Returns dict {mode: (M,) int32 lpns, -1-padded}, hottest-first.
+    """
+    M = cfg.migrate_pages_per_chunk
+    cls = hotness.classify(page_heat, cfg.heat)
+
+    if cfg.policy == geometry.RARO:
+        th = thresholds_for(cfg, pe_cycles)
+        target = policy.migration_decision(page_mode, cls, page_retries, th)
+    elif cfg.policy == geometry.HOTNESS:
+        target = policy.hotness_only_decision(page_mode, cls)
+    else:  # BASELINE
+        target = page_mode
+
+    out = {}
+    for tgt in (modes.SLC, modes.TLC):
+        trig = page_ok & (target == tgt) & (page_mode != tgt) & (page_mode > tgt)
+        score = jnp.where(trig, page_heat, -jnp.inf)
+        k = min(M, score.shape[0])
+        v, i = lax.top_k(score, k)
+        sel = jnp.where(v > -jnp.inf, uniq_lpns[i], -1).astype(jnp.int32)
+        if k < M:
+            sel = jnp.pad(sel, (0, M - k), constant_values=-1)
+        out[tgt] = sel
+    return out

@@ -1,0 +1,122 @@
+"""Simulator state — a flat pytree of arrays so the whole engine jits/scans.
+
+Physical page addressing: slot = block * slots_per_block + offset. A block
+programmed in TLC/SLC mode only uses the first pages_per_block(mode) offsets.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import modes
+from repro.ssdsim import geometry
+
+FREE = 0
+OPEN = 1
+FULL = 2
+
+
+class SSDState(NamedTuple):
+    # mapping
+    l2p: jnp.ndarray  # (L,) int32 logical -> physical slot (-1 unmapped)
+    p2l: jnp.ndarray  # (S,) int32 physical slot -> logical (-1 invalid)
+    page_write_ms: jnp.ndarray  # (S,) float32 sim-clock time of program
+
+    # per-block
+    block_mode: jnp.ndarray  # (B,) int32 SLC/TLC/QLC
+    block_state: jnp.ndarray  # (B,) int32 FREE/OPEN/FULL
+    block_pe: jnp.ndarray  # (B,) int32 P/E cycles
+    block_reads: jnp.ndarray  # (B,) int32 reads since program (disturb)
+    block_next: jnp.ndarray  # (B,) int32 next free offset
+    block_valid: jnp.ndarray  # (B,) int32 valid page count
+    block_cold_age: jnp.ndarray  # (B,) int32 epochs since any hot/warm access
+
+    # heat (logical)
+    heat: jnp.ndarray  # (L,) float32
+
+    # allocation cursors
+    open_user: jnp.ndarray  # (n_luns,) int32 open block per LUN (-1 none)
+    open_mig: jnp.ndarray  # (3,) int32 open migration block per mode (-1)
+
+    # timing
+    clock_ms: jnp.ndarray  # f32 scalar — simulated time
+    lun_busy_ms: jnp.ndarray  # (n_luns,) f32 — cumulative busy time
+    chan_busy_ms: jnp.ndarray  # (n_channels,) f32
+
+    # counters (f32 scalars; summed per-chunk so precision is fine)
+    svc_sum_ms: jnp.ndarray  # total user-read service time (latency + xfer)
+    n_reads: jnp.ndarray
+    n_writes: jnp.ndarray
+    n_retries: jnp.ndarray
+    n_migrated_pages: jnp.ndarray
+    n_erases: jnp.ndarray
+    n_conversions: jnp.ndarray  # (3,3) from-mode x to-mode counts
+
+
+def init_state(cfg: geometry.SimConfig) -> SSDState:
+    """Pre-filled device: L logical pages written sequentially into QLC
+    blocks (LUN-striped by block id), remaining blocks free. Matches the
+    paper's setup: 'Initially, the block types of the hybrid SSD are set to
+    the QLC mode'."""
+    B, S, L = cfg.n_blocks, cfg.n_slots, cfg.n_logical
+    spb = cfg.slots_per_block
+    assert L <= S, "working set must fit the device"
+    n_full = L // spb  # fully used blocks
+    rem = L - n_full * spb
+
+    lpn = jnp.arange(L, dtype=jnp.int32)
+    l2p = lpn  # block i//spb, offset i%spb -> slot == lpn
+    p2l = jnp.full((S,), -1, jnp.int32).at[lpn].set(lpn)
+
+    blk = jnp.arange(B, dtype=jnp.int32)
+    used_full = blk < n_full
+    part = (blk == n_full) & (rem > 0)
+    block_state = jnp.where(used_full, FULL, jnp.where(part, OPEN, FREE)).astype(jnp.int32)
+    block_next = jnp.where(used_full, spb, jnp.where(part, rem, 0)).astype(jnp.int32)
+    block_valid = block_next
+
+    return SSDState(
+        l2p=l2p,
+        p2l=p2l,
+        page_write_ms=jnp.zeros((S,), jnp.float32),
+        block_mode=jnp.full((B,), modes.QLC, jnp.int32),
+        block_state=block_state,
+        block_pe=jnp.full((B,), cfg.initial_pe, jnp.int32),
+        block_reads=jnp.zeros((B,), jnp.int32),
+        block_next=block_next,
+        block_valid=block_valid,
+        block_cold_age=jnp.zeros((B,), jnp.int32),
+        heat=jnp.zeros((L,), jnp.float32),
+        open_user=jnp.full((cfg.n_luns,), -1, jnp.int32),
+        open_mig=jnp.full((3,), -1, jnp.int32),
+        clock_ms=jnp.float32(0.0),
+        lun_busy_ms=jnp.zeros((cfg.n_luns,), jnp.float32),
+        chan_busy_ms=jnp.zeros((cfg.n_channels,), jnp.float32),
+        svc_sum_ms=jnp.float32(0.0),
+        n_reads=jnp.float32(0.0),
+        n_writes=jnp.float32(0.0),
+        n_retries=jnp.float32(0.0),
+        n_migrated_pages=jnp.float32(0.0),
+        n_erases=jnp.float32(0.0),
+        n_conversions=jnp.zeros((3, 3), jnp.float32),
+    )
+
+
+def usable_capacity_pages(state: SSDState, cfg: geometry.SimConfig):
+    """Usable capacity in pages: non-free blocks count at their current
+    mode's page count; free blocks count at QLC density (they can be opened
+    in any mode, so their capacity potential is the dense one)."""
+    ppb = geometry.pages_per_block(cfg)
+    per_block = jnp.where(
+        state.block_state == FREE,
+        ppb[modes.QLC],
+        ppb[state.block_mode],
+    )
+    return per_block.sum()
+
+
+def capacity_gib(state: SSDState, cfg: geometry.SimConfig):
+    # float cast first: pages * page_bytes overflows int32 at real geometry
+    return usable_capacity_pages(state, cfg).astype(jnp.float32) * cfg.page_bytes / 2**30

@@ -1,0 +1,70 @@
+"""FIO-like workload generation (paper §V-A): Zipf-distributed random reads
+over an 8 GiB dataset, plus sequential and mixed read/write traces for the
+motivation figures. Host-side numpy; the engine consumes padded
+(n_chunks, chunk) arrays.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.ssdsim import geometry
+from repro.ssdsim.engine import OP_READ, OP_WRITE
+
+
+def _pack(cfg: geometry.SimConfig, lpn: np.ndarray, op: np.ndarray):
+    c = cfg.chunk
+    n = len(lpn)
+    n_chunks = -(-n // c)
+    pad = n_chunks * c - n
+    lpn = np.concatenate([lpn, np.full(pad, -1, np.int32)])
+    op = np.concatenate([op, np.full(pad, OP_READ, np.int32)])
+    return {
+        "lpn": lpn.reshape(n_chunks, c).astype(np.int32),
+        "op": op.reshape(n_chunks, c).astype(np.int32),
+    }
+
+
+def zipf_probs(n: int, theta: float) -> np.ndarray:
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    w = ranks**-theta
+    return w / w.sum()
+
+
+def zipf_read_trace(cfg: geometry.SimConfig, n_requests: int, theta: float,
+                    seed: int = 0, hot_fraction_cap: float = 1.0):
+    """Random reads with Zipf(theta) popularity. Hot ranks are scattered
+    over the logical space by a fixed permutation (FIO's zipf behaves the
+    same way: popularity rank is decoupled from LBA locality)."""
+    rng = np.random.default_rng(seed)
+    L = cfg.n_logical
+    n_ranked = max(int(L * hot_fraction_cap), 1)
+    p = zipf_probs(n_ranked, theta)
+    ranks = rng.choice(n_ranked, size=n_requests, p=p)
+    perm = rng.permutation(L)[:n_ranked]
+    lpn = perm[ranks].astype(np.int32)
+    return _pack(cfg, lpn, np.full(n_requests, OP_READ, np.int32))
+
+
+def seq_read_trace(cfg: geometry.SimConfig, n_requests: int, start: int = 0):
+    lpn = (start + np.arange(n_requests)) % cfg.n_logical
+    return _pack(cfg, lpn.astype(np.int32), np.full(n_requests, OP_READ, np.int32))
+
+
+def uniform_read_trace(cfg: geometry.SimConfig, n_requests: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    lpn = rng.integers(0, cfg.n_logical, size=n_requests).astype(np.int32)
+    return _pack(cfg, lpn, np.full(n_requests, OP_READ, np.int32))
+
+
+def mixed_trace(cfg: geometry.SimConfig, n_requests: int, theta: float,
+                read_frac: float = 0.7, seed: int = 0):
+    """Zipf reads interleaved with uniform-random overwrites."""
+    rng = np.random.default_rng(seed)
+    L = cfg.n_logical
+    p = zipf_probs(L, theta)
+    ranks = rng.choice(L, size=n_requests, p=p)
+    perm = rng.permutation(L)
+    lpn = perm[ranks].astype(np.int32)
+    op = np.where(rng.random(n_requests) < read_frac, OP_READ, OP_WRITE).astype(np.int32)
+    return _pack(cfg, lpn, op)

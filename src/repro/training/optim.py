@@ -1,0 +1,88 @@
+"""Sharded AdamW with optional ZeRO-style moment sharding over the data
+axis, cosine LR schedule, global-norm clipping. Pure jnp; optimizer state
+specs mirror the parameter specs so the dry-run stays allocation-free.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ParamSpec, is_spec
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    m: dict
+    v: dict
+    count: jnp.ndarray
+
+
+def opt_state_specs(param_specs) -> OptState:
+    """Moment specs: same shapes/axes as params, f32 (dry-run abstract)."""
+    f32 = jax.tree_util.tree_map(
+        lambda s: ParamSpec(s.shape, s.axes, "zeros", jnp.float32),
+        param_specs, is_leaf=is_spec,
+    )
+    return OptState(m=f32, v=f32, count=ParamSpec((), (), "zeros", jnp.int32))
+
+
+def init(params) -> OptState:
+    z = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(m=z, v=jax.tree_util.tree_map(jnp.copy, z), count=jnp.int32(0))
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup) / max(cfg.total_steps - cfg.warmup, 1), 0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def update(cfg: AdamWConfig, params, grads, state: OptState):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    count = state.count + 1
+    lr = schedule(cfg, count)
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    flat_p, td = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.m)
+    flat_v = jax.tree_util.tree_leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(td, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(td, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(td, [o[2] for o in out])
+    return new_p, OptState(new_m, new_v, count), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,120 @@
+"""Unit + property tests for heat classification, Table-II policy, controller
+aggregation and elastic reclaim."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import controller, hotness, modes, policy, reclaim
+
+CFG = hotness.HeatConfig(decay=0.9, hot_thresh=8.0, warm_thresh=2.0)
+
+
+class TestHotness:
+    def test_classify_thresholds(self):
+        h = jnp.array([0.0, 1.9, 2.0, 7.9, 8.0, 100.0])
+        c = hotness.classify(h, CFG)
+        np.testing.assert_array_equal(np.array(c), [0, 0, 1, 1, 2, 2])
+
+    def test_decay_to_cold(self):
+        h = jnp.full((4,), 10.0)
+        for _ in range(60):
+            h = hotness.decay_heat(h, CFG)
+        assert int(hotness.classify(h, CFG)[0]) == modes.COLD
+
+    def test_update_accumulates_duplicates(self):
+        h = jnp.zeros(4)
+        h = hotness.update_heat(h, jnp.array([1, 1, 1, 2]), CFG)
+        assert float(h[1]) == 3.0 and float(h[2]) == 1.0
+
+
+class TestTableII:
+    def _th(self):
+        return policy.Thresholds(jnp.int32(1), jnp.int32(5))
+
+    def test_qlc_hot_to_slc(self):
+        t = policy.migration_decision(modes.QLC, modes.HOT, 1, self._th())
+        assert int(t) == modes.SLC
+
+    def test_qlc_warm_to_tlc_requires_r2(self):
+        th = self._th()
+        assert int(policy.migration_decision(modes.QLC, modes.WARM, 4, th)) == modes.QLC
+        assert int(policy.migration_decision(modes.QLC, modes.WARM, 5, th)) == modes.TLC
+
+    def test_tlc_hot_to_slc(self):
+        assert int(policy.migration_decision(modes.TLC, modes.HOT, 1, self._th())) == modes.SLC
+
+    def test_cold_never_migrates(self):
+        for m in (modes.QLC, modes.TLC, modes.SLC):
+            assert int(policy.migration_decision(m, modes.COLD, 16, self._th())) == m
+
+    def test_slc_never_converts_further(self):
+        for h in (modes.COLD, modes.WARM, modes.HOT):
+            assert int(policy.migration_decision(modes.SLC, h, 16, self._th())) == modes.SLC
+
+    def test_below_r1_stays(self):
+        assert int(policy.migration_decision(modes.QLC, modes.HOT, 0, self._th())) == modes.QLC
+
+    def test_stage_r2_schedule(self):
+        th = policy.stage_thresholds(jnp.array([100, 500, 900]))
+        np.testing.assert_array_equal(np.array(th.r2), [5, 7, 11])
+
+    @given(
+        mode=st.integers(0, 2),
+        heat=st.integers(0, 2),
+        retries=st.integers(0, 16),
+        r1=st.integers(0, 4),
+        dr2=st.integers(0, 12),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_property_monotone_and_no_densification(self, mode, heat, retries, r1, dr2):
+        """Invariants: (a) conversion never increases density; (b) RARO
+        triggers imply the Hotness scheme would also trigger (RARO is a
+        strict filter on Hotness, which is WHY capacity loss shrinks)."""
+        th = policy.Thresholds(jnp.int32(r1), jnp.int32(r1 + dr2))
+        t = int(policy.migration_decision(mode, heat, retries, th))
+        assert t <= mode  # never to a denser mode
+        h = int(policy.hotness_only_decision(mode, heat))
+        if t != mode:  # RARO migrated => Hotness migrates at least as far down
+            assert h <= t
+
+
+class TestController:
+    def test_block_plan_min_target_wins(self):
+        # 2 blocks x 3 pages; block 0 has one page wanting SLC, one TLC.
+        page_block = jnp.array([0, 0, 0, 1, 1, 1])
+        page_mode = jnp.full(6, modes.QLC, jnp.int32)
+        page_target = jnp.array([modes.SLC, modes.TLC, modes.QLC, modes.QLC, modes.QLC, modes.QLC])
+        valid = jnp.ones(6, bool)
+        bm = jnp.full(2, modes.QLC, jnp.int32)
+        plan = controller.block_conversion_plan(page_target, page_mode, page_block, valid, 2, bm)
+        np.testing.assert_array_equal(np.array(plan), [modes.SLC, modes.QLC])
+
+    def test_invalid_pages_do_not_trigger(self):
+        page_block = jnp.array([0, 0])
+        page_mode = jnp.full(2, modes.QLC, jnp.int32)
+        page_target = jnp.array([modes.SLC, modes.QLC])
+        valid = jnp.array([False, True])
+        bm = jnp.full(1, modes.QLC, jnp.int32)
+        plan = controller.block_conversion_plan(page_target, page_mode, page_block, valid, 1, bm)
+        assert int(plan[0]) == modes.QLC
+
+
+class TestReclaim:
+    def test_no_demotion_without_pressure(self):
+        mode = jnp.array([modes.SLC, modes.TLC])
+        m, _ = reclaim.select_demotions(mode, jnp.zeros(2), jnp.full(2, 10), 0.9, reclaim.ReclaimConfig())
+        assert int(m.sum()) == 0
+
+    def test_demotes_one_level_only(self):
+        mode = jnp.array([modes.SLC, modes.TLC, modes.QLC])
+        m, t = reclaim.select_demotions(mode, jnp.zeros(3), jnp.full(3, 10), 0.01, reclaim.ReclaimConfig())
+        assert bool(m[0]) and bool(m[1]) and not bool(m[2])
+        assert int(t[0]) == modes.TLC and int(t[1]) == modes.QLC
+
+    def test_hysteresis_cold_epochs(self):
+        mode = jnp.array([modes.SLC])
+        m, _ = reclaim.select_demotions(mode, jnp.zeros(1), jnp.array([1]), 0.01,
+                                        reclaim.ReclaimConfig(cold_epochs=4))
+        assert int(m.sum()) == 0

@@ -1,0 +1,44 @@
+"""Validate the analytic roofline FLOPs model against XLA's compiled
+cost_analysis. XLA counts while-loop bodies ONCE, so the comparison uses
+1-layer configs where total = entry + one body — the regime where both
+numbers measure the same thing."""
+
+import jax
+import pytest
+
+from benchmarks.roofline import model_flops
+from repro.configs import ARCHS
+from repro.configs.base import ShapeConfig
+from repro.models import base, registry
+from repro.training import optim, train_step as ts
+
+SMALL_TRAIN = ShapeConfig("t", 512, 8, "train")
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "deepseek-7b"])
+def test_analytic_flops_matches_compiled_one_layer(arch):
+    cfg = ARCHS[arch].with_(n_layers=1, remat=False)
+    api = registry.get_api(cfg)
+    specs = api.specs()
+    params_abs = base.abstract(specs)
+    o_abs = base.abstract(optim.opt_state_specs(specs))
+    inputs = registry.input_specs(cfg, SMALL_TRAIN)
+
+    step = ts.make_train_step(cfg, optim.AdamWConfig())
+    compiled = jax.jit(step).lower(params_abs, o_abs, inputs).compile()
+    hlo_flops = float(compiled.cost_analysis().get("flops", 0.0))
+    analytic = model_flops(cfg, SMALL_TRAIN)["total"]
+
+    # same order of magnitude and within 35% — the analytic model is used
+    # to scale per-layer cost by n_layers, which XLA's counter cannot do.
+    assert hlo_flops > 0
+    ratio = analytic / hlo_flops
+    assert 0.65 < ratio < 1.5, (analytic, hlo_flops, ratio)
+
+
+def test_flops_scale_linearly_in_layers_analytically():
+    shape = SMALL_TRAIN
+    f1 = model_flops(ARCHS["tinyllama-1.1b"].with_(n_layers=1), shape)
+    f2 = model_flops(ARCHS["tinyllama-1.1b"].with_(n_layers=2), shape)
+    assert abs((f2["layers_fwd"] / f1["layers_fwd"]) - 2.0) < 1e-6
+    assert f1["head_fwd"] == f2["head_fwd"]

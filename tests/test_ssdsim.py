@@ -1,0 +1,202 @@
+"""Integration + property tests for the flash-simulator layer."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st_h
+
+from repro.core import modes
+from repro.ssdsim import engine, ftl, geometry, state as st, workload
+
+TINY = geometry.tiny_config()
+
+
+def _invariants(s, cfg):
+    """Full-state consistency: mapping bijection, valid counts, mode ranges."""
+    l2p = np.array(s.l2p)
+    p2l = np.array(s.p2l)
+    spb = cfg.slots_per_block
+
+    mapped = l2p >= 0
+    # bijection on mapped pages
+    assert (p2l[l2p[mapped]] == np.arange(cfg.n_logical)[mapped]).all()
+    # every valid physical slot maps back
+    vslots = np.nonzero(p2l >= 0)[0]
+    assert (l2p[p2l[vslots]] == vslots).all()
+    # block_valid matches recount
+    bv = np.array(s.block_valid)
+    counts = np.bincount(vslots // spb, minlength=cfg.n_blocks)
+    assert (bv == counts).all()
+    # block metadata in range
+    bm = np.array(s.block_mode)
+    assert ((bm >= 0) & (bm <= 2)).all()
+    bn = np.array(s.block_next)
+    ppb = np.array(geometry.pages_per_block(cfg))
+    nonfree = np.array(s.block_state) != st.FREE
+    assert (bn[nonfree] <= ppb[bm[nonfree]]).all()
+    assert (bn >= bv).all()  # valid pages never exceed programmed pages
+
+
+class TestInit:
+    def test_initial_capacity_is_full_qlc(self):
+        s = st.init_state(TINY)
+        cap = int(st.usable_capacity_pages(s, TINY))
+        assert cap == TINY.n_blocks * TINY.slots_per_block
+
+    def test_initial_mapping(self):
+        s = st.init_state(TINY)
+        _invariants(s, TINY)
+        assert (np.array(s.l2p) >= 0).all()
+
+
+class TestEngine:
+    @pytest.fixture(scope="class")
+    def raro_run(self):
+        cfg = geometry.tiny_config(policy=geometry.RARO, initial_pe=500)
+        tr = workload.zipf_read_trace(cfg, 20_000, 1.2, seed=1)
+        s, ys = engine.run(cfg, tr)
+        return cfg, s, ys
+
+    def test_invariants_after_run(self, raro_run):
+        cfg, s, _ = raro_run
+        _invariants(s, cfg)
+
+    def test_no_data_loss(self, raro_run):
+        cfg, s, _ = raro_run
+        assert (np.array(s.l2p) >= 0).all()  # every logical page still mapped
+
+    def test_conversions_happened(self, raro_run):
+        cfg, s, _ = raro_run
+        conv = np.array(s.n_conversions)
+        assert conv[modes.QLC, modes.SLC] + conv[modes.QLC, modes.TLC] > 0
+
+    def test_capacity_loss_matches_mode_deficit(self, raro_run):
+        cfg, s, _ = raro_run
+        ppb = np.array(geometry.pages_per_block(cfg))
+        bm, bs = np.array(s.block_mode), np.array(s.block_state)
+        nonfree = bs != st.FREE
+        deficit = (ppb[modes.QLC] - ppb[bm[nonfree]]).sum()
+        cap = int(st.usable_capacity_pages(s, cfg))
+        assert cap == cfg.n_blocks * cfg.slots_per_block - deficit
+
+    def test_baseline_never_converts(self):
+        cfg = geometry.tiny_config(policy=geometry.BASELINE, initial_pe=500)
+        tr = workload.zipf_read_trace(cfg, 5_000, 1.2, seed=1)
+        s, _ = engine.run(cfg, tr)
+        assert float(s.n_conversions.sum()) == 0.0
+        assert float(s.n_migrated_pages) == 0.0
+
+    def test_raro_beats_baseline_iops(self):
+        res = {}
+        for pol in (geometry.BASELINE, geometry.RARO):
+            cfg = geometry.tiny_config(policy=pol, initial_pe=833)
+            tr = workload.zipf_read_trace(cfg, 20_000, 1.2, seed=1)
+            s, _ = engine.run(cfg, tr)
+            res[pol] = engine.summarize(s, cfg)["iops"]
+        assert res[geometry.RARO] > 3.0 * res[geometry.BASELINE]
+
+    def test_raro_saves_capacity_vs_hotness(self):
+        res = {}
+        for pol in (geometry.HOTNESS, geometry.RARO):
+            cfg = geometry.tiny_config(policy=pol, initial_pe=166)
+            tr = workload.zipf_read_trace(cfg, 20_000, 1.2, seed=1)
+            s, _ = engine.run(cfg, tr)
+            res[pol] = engine.summarize(s, cfg)
+        assert (
+            res[geometry.RARO]["capacity_loss_gib"]
+            <= res[geometry.HOTNESS]["capacity_loss_gib"]
+        )
+        assert (
+            res[geometry.RARO]["migrated_pages"]
+            < res[geometry.HOTNESS]["migrated_pages"]
+        )
+
+    def test_retry_counts_grow_with_wear(self):
+        out = {}
+        for pe in (166, 833):
+            cfg = geometry.tiny_config(policy=geometry.BASELINE, initial_pe=pe)
+            tr = workload.zipf_read_trace(cfg, 5_000, 1.2, seed=1)
+            s, _ = engine.run(cfg, tr)
+            out[pe] = engine.summarize(s, cfg)["retries_per_read"]
+        assert out[833] > out[166]
+
+    def test_write_path(self):
+        cfg = geometry.tiny_config(policy=geometry.RARO, initial_pe=166)
+        tr = workload.mixed_trace(cfg, 3_000, 1.2, read_frac=0.6, seed=2)
+        s, _ = engine.run(cfg, tr)
+        _invariants(s, cfg)
+        assert float(s.n_writes) > 0
+        assert (np.array(s.l2p) >= 0).all()
+
+    def test_single_thread_summary(self, raro_run):
+        cfg, s, _ = raro_run
+        m1 = engine.summarize(s, cfg, threads=1)
+        m4 = engine.summarize(s, cfg, threads=4)
+        assert m1["iops"] > 0 and m4["iops"] > 0
+
+
+class TestFTL:
+    def test_migrate_block_roundtrip(self):
+        cfg = TINY
+        s = st.init_state(cfg)
+        cap0 = int(st.usable_capacity_pages(s, cfg))
+        s2 = ftl.migrate_block(s, jnp.int32(0), jnp.int32(modes.SLC), cfg)
+        _invariants(s2, cfg)
+        # all pages from block 0 still mapped somewhere else
+        assert (np.array(s2.l2p)[: cfg.slots_per_block] >= 0).all()
+        assert (np.array(s2.l2p)[: cfg.slots_per_block] >= cfg.slots_per_block).all()
+        # capacity shrank by the SLC deficit of the opened blocks
+        cap1 = int(st.usable_capacity_pages(s2, cfg))
+        assert cap1 < cap0
+        assert float(s2.n_erases) == 1.0
+
+    def test_migrate_pages_moves_and_invalidates(self):
+        cfg = TINY
+        s = st.init_state(cfg)
+        lpns = jnp.array([0, 1, 2, -1, -1, -1, 7, 9] + [-1] * 8, jnp.int32)
+        s2 = ftl.migrate_pages(s, lpns, jnp.int32(modes.SLC), cfg)
+        _invariants(s2, cfg)
+        moved = np.array(s2.l2p)[[0, 1, 2, 7, 9]]
+        assert (moved != np.array([0, 1, 2, 7, 9])).all()
+        bm = np.array(s2.block_mode)
+        assert (bm[moved // cfg.slots_per_block] == modes.SLC).all()
+
+    def test_gc_reclaims_space(self):
+        cfg = geometry.tiny_config(gc_free_threshold=100)  # force GC pressure
+        s = st.init_state(cfg)
+        # make blocks 0 and 1 mostly-invalid GC victims (16/64 valid each)
+        spb = cfg.slots_per_block
+        kill = jnp.concatenate(
+            [jnp.arange(0, spb - 16), jnp.arange(spb, 2 * spb - 16)]
+        ).astype(jnp.int32)
+        s = s._replace(
+            p2l=s.p2l.at[kill].set(-1),
+            l2p=s.l2p.at[kill].set(-1),
+            block_valid=s.block_valid.at[jnp.array([0, 1])].add(-(spb - 16)),
+        )
+        free0 = int(ftl.free_block_count(s))
+        # two passes: both victims compact into ONE shared open block, so the
+        # pool nets at least one extra free block.
+        s2 = ftl.gc_step(ftl.gc_step(s, cfg), cfg)
+        _invariants(s2, cfg)
+        assert int(ftl.free_block_count(s2)) >= free0 + 1
+        assert float(s2.n_erases) == 2.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st_h.integers(0, 2**16),
+    theta=st_h.floats(0.6, 1.5),
+    pol=st_h.sampled_from([geometry.BASELINE, geometry.HOTNESS, geometry.RARO]),
+    pe=st_h.integers(0, 1000),
+)
+def test_property_engine_invariants(seed, theta, pol, pe):
+    """Any (workload, policy, wear) keeps the FTL state consistent."""
+    cfg = geometry.tiny_config(policy=pol, initial_pe=pe)
+    tr = workload.zipf_read_trace(cfg, 2_000, theta, seed=seed)
+    s, ys = engine.run(cfg, tr)
+    _invariants(s, cfg)
+    cap = np.array(ys.capacity_pages)
+    assert (cap > 0).all()
+    assert (np.array(ys.free_blocks) >= 0).all()
