@@ -15,9 +15,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="reduced request counts")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--artifacts", default=None, metavar="DIR",
+                    help="write per-run BENCH_*.json sweep artifacts here")
     args = ap.parse_args()
 
-    from benchmarks import paper_figs, tiered_kv
+    from benchmarks import paper_figs, sweep_bench, tiered_kv
 
     q = args.quick
     sections = [
@@ -29,6 +31,10 @@ def main() -> None:
             thetas=(1.2,) if q else (1.2, 1.5),
             threads=(4,) if q else (4, 1))),
         ("fig17_18", lambda: paper_figs.fig17_18_sensitivity(40_000 if q else 120_000)),
+        ("sweep", lambda: sweep_bench.sweep_tail_latency(
+            24_000 if q else 80_000,
+            msr_requests=8_000 if q else 24_000,
+            out_dir=args.artifacts)),
         ("tiered_kv", lambda: tiered_kv.kv_policy_comparison(24 if q else 48)),
     ]
 

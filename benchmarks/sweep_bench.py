@@ -1,0 +1,70 @@
+"""Tail-latency sweep section for the benchmark harness.
+
+Drives repro.experiments end-to-end: a vmapped 8-run grid (2 policies x 2
+wear stages x 2 seeds, one jit per policy group) on the read-disturb-hammer
+scenario — the workload where retries hurt p99 most — plus a replay of the
+bundled MSR-style sample trace. Emits per-run p50/p95/p99 read latency next
+to the mean, and the headline raro-vs-baseline p99 ratios the paper's
+"diverse workloads" claim rests on.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.experiments import sweep
+from repro.ssdsim import geometry
+
+
+def _p99_ratio_rows(results, scenario: str):
+    """Geomean-over-seeds baseline/raro p99 ratio per wear stage."""
+    rows = []
+    stages = sorted({r["run"]["initial_pe"] for r in results})
+    for pe in stages:
+        by_pol = {}
+        for pol in ("baseline", "raro"):
+            v = [r["read_lat_p99_us"] for r in results
+                 if r["run"]["initial_pe"] == pe and r["run"]["policy"] == pol]
+            if v:
+                by_pol[pol] = float(np.exp(np.mean(np.log(np.maximum(v, 1e-9)))))
+        if len(by_pol) == 2:
+            rows.append((f"sweep/{scenario}/pe{pe}/raro_vs_base_p99",
+                         by_pol["baseline"] / by_pol["raro"], "x"))
+    return rows
+
+
+def sweep_tail_latency(n_requests=80_000, msr_requests=24_000, out_dir=None):
+    base = geometry.SimConfig(device_age_h=24.0)
+    rows = []
+
+    hammer = sweep.SweepSpec(
+        scenario="read_disturb_hammer",
+        n_requests=n_requests,
+        policies=(geometry.BASELINE, geometry.RARO),
+        initial_pe=(166, 833),
+        seeds=(0, 1),
+        base=base,
+    )
+    res = sweep.run_sweep(hammer, verbose=True)
+    for r in res:
+        rows += sweep.result_rows(r)
+    rows += _p99_ratio_rows(res, "read_disturb_hammer")
+
+    # bundled MSR-style trace replayed through the same runner (mixed R/W)
+    msr = sweep.SweepSpec(
+        scenario="msr_sample",
+        n_requests=msr_requests,
+        policies=(geometry.BASELINE, geometry.RARO),
+        initial_pe=(500,),
+        seeds=(0,),
+        base=base,
+    )
+    res_msr = sweep.run_sweep(msr, verbose=True)
+    for r in res_msr:
+        rows += sweep.result_rows(r)
+    rows += _p99_ratio_rows(res_msr, "msr_sample")
+
+    if out_dir is not None:
+        paths = sweep.write_artifacts(res + res_msr, out_dir)
+        print(f"# wrote {len(paths)} BENCH_*.json artifacts to {out_dir}", flush=True)
+    return rows

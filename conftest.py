@@ -2,6 +2,6 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).parent
-for p in (ROOT, ROOT / "src"):
+for p in (ROOT, ROOT / "src", ROOT / "tests"):
     if str(p) not in sys.path:
         sys.path.insert(0, str(p))

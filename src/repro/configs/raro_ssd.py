@@ -6,3 +6,22 @@ YOUNG = SimConfig(policy=RARO, initial_pe=166, device_age_h=24.0)
 MIDDLE = SimConfig(policy=RARO, initial_pe=500, device_age_h=24.0)
 OLD = SimConfig(policy=RARO, initial_pe=833, device_age_h=24.0)
 STAGES = {"young": YOUNG, "middle": MIDDLE, "old": OLD}
+STAGE_PE = {"young": 166, "middle": 500, "old": 833}
+
+
+def tail_latency_sweep(scenario: str = "read_disturb_hammer",
+                       n_requests: int = 80_000,
+                       stages=("young", "old"), seeds=(0, 1)):
+    """Canonical tail-latency experiment grid (paper Figs. 13-18 axes):
+    baseline-vs-RARO across wear stages and seeds, batched by the vmapped
+    sweep runner (repro.experiments.sweep)."""
+    from repro.experiments.sweep import SweepSpec
+
+    return SweepSpec(
+        scenario=scenario,
+        n_requests=n_requests,
+        policies=(BASELINE, RARO),
+        initial_pe=tuple(STAGE_PE[s] for s in stages),
+        seeds=tuple(seeds),
+        base=SimConfig(device_age_h=24.0),
+    )

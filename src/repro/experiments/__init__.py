@@ -1,0 +1,6 @@
+# Experiments subsystem (DESIGN.md §7): scenario library + block-trace
+# replay + vmapped sweep orchestration + tail-latency reporting. A new layer
+# between the simulator core (repro.ssdsim) and the benchmark harness
+# (benchmarks.run): the core stays single-run and knob-static, the harness
+# stays print-only, and everything batched/multi-workload lives here.
+from repro.experiments import registry, scenarios, sweep, traces  # noqa: F401

@@ -1,0 +1,220 @@
+"""Vmapped sweep orchestration (DESIGN.md §7.3).
+
+Runs a (policy x wear x seed x knob x scenario) grid through the simulator
+with one compiled program per *static* group. The split:
+
+  batched through ``jax.vmap`` (one jit, stacked run axis):
+      seeds / scenario draws (different traces, same shape),
+      ``r1``, ``r2_override``, ``initial_pe``  (RunKnobs — traced scalars)
+  looped in Python (change trace shapes or compiled branches):
+      policy, geometry/SimConfig, scenario name, request count
+
+so the canonical 2-policy x 2-wear x 2-seed grid compiles exactly twice and
+executes 4 runs per dispatch. Results are per-run dicts (engine.summarize +
+run metadata) and optional ``BENCH_*.json`` artifacts in the harness's
+``name,value,unit`` row format.
+"""
+
+from __future__ import annotations
+
+import itertools
+import json
+import warnings
+from dataclasses import dataclass, field, replace
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.experiments import registry
+from repro.ssdsim import engine, geometry, policies
+from repro.ssdsim import state as st
+
+
+@dataclass(frozen=True)
+class SweepSpec:
+    """A full experiment grid (cross product of every axis)."""
+
+    scenario: str = "zipf"
+    n_requests: int = 20_000
+    policies: tuple[int, ...] = (geometry.BASELINE, geometry.RARO)
+    initial_pe: tuple[int, ...] = (166, 833)
+    seeds: tuple[int, ...] = (0, 1)
+    r1: tuple[int, ...] = (1,)
+    r2_override: tuple[int, ...] = (-1,)
+    # forwarded to the scenario builder (e.g. {"theta": 1.2}); tuple-of-items
+    # so the spec stays hashable
+    scenario_kw: tuple[tuple[str, object], ...] = ()
+    base: geometry.SimConfig = field(default_factory=geometry.SimConfig)
+
+    def n_runs(self) -> int:
+        return (len(self.policies) * len(self.initial_pe) * len(self.seeds)
+                * len(self.r1) * len(self.r2_override))
+
+
+@dataclass(frozen=True)
+class RunSpec:
+    """One point of the grid."""
+
+    scenario: str
+    policy: int
+    initial_pe: int
+    seed: int
+    r1: int
+    r2_override: int
+
+    def tag(self) -> str:
+        parts = [
+            self.scenario,
+            geometry.POLICY_NAMES[self.policy],
+            f"pe{self.initial_pe}",
+            f"seed{self.seed}",
+        ]
+        if self.r1 != 1:
+            parts.append(f"r1_{self.r1}")
+        if self.r2_override >= 0:
+            parts.append(f"r2_{self.r2_override}")
+        return "_".join(parts)
+
+
+def expand(spec: SweepSpec) -> list[RunSpec]:
+    return [
+        RunSpec(spec.scenario, pol, pe, seed, r1, r2)
+        for pol, pe, seed, r1, r2 in itertools.product(
+            spec.policies, spec.initial_pe, spec.seeds, spec.r1, spec.r2_override
+        )
+    ]
+
+
+@partial(jax.jit, static_argnums=(0, 3))
+def _sweep_jit(cfg: geometry.SimConfig, lpns, ops, has_writes: bool,
+               knobs: policies.RunKnobs):
+    """Run a stacked batch of traces; everything dynamic rides the vmap axis.
+
+    ``lpns``/``ops``: (R, n_chunks, chunk); ``knobs``: (R,) int32 fields.
+    Returns the stacked final state pytree (leading run axis on every leaf).
+    """
+
+    def one(lpns_i, ops_i, knobs_i):
+        s0 = st.init_state(cfg, initial_pe=knobs_i.initial_pe)
+
+        def body(s, x):
+            return engine.step_chunk(s, x, cfg, has_writes, knobs_i)
+
+        s, _ = lax.scan(body, s0, (lpns_i, ops_i))
+        return s
+
+    return jax.vmap(one)(lpns, ops, knobs)
+
+
+def _take_run(stacked, i: int):
+    return jax.tree_util.tree_map(lambda x: x[i], stacked)
+
+
+def run_sweep(spec: SweepSpec, threads: int = 4, verbose: bool = False):
+    """Execute the grid. Returns one result dict per run: everything from
+    ``engine.summarize`` (mean + p50/p95/p99/p999 read latency, IOPS,
+    capacity, ...) plus the run's metadata under ``"run"``.
+    """
+    runs = expand(spec)
+    kw = dict(spec.scenario_kw)
+    if len(spec.seeds) > 1 and registry.is_seed_invariant(spec.scenario):
+        warnings.warn(
+            f"scenario {spec.scenario!r} is deterministic w.r.t. seed; "
+            f"{len(spec.seeds)} seeds will produce identical runs",
+            stacklevel=2,
+        )
+
+    # traces depend only on (scenario, seed): build each once, share across
+    # policies/knobs
+    traces: dict[int, dict] = {}
+    for seed in spec.seeds:
+        traces[seed] = registry.build(
+            spec.scenario, spec.base, spec.n_requests, seed=seed, **kw
+        )
+    has_writes = bool(any((t["op"] == engine.OP_WRITE).any() for t in traces.values()))
+
+    results = []
+    for pol in spec.policies:  # static axis -> one compile each
+        group = [r for r in runs if r.policy == pol]
+        cfg = replace(spec.base, policy=pol)
+        lpns = jnp.stack([jnp.asarray(traces[r.seed]["lpn"], jnp.int32) for r in group])
+        ops = jnp.stack([jnp.asarray(traces[r.seed]["op"], jnp.int32) for r in group])
+        knobs = policies.RunKnobs(
+            r1=jnp.asarray([r.r1 for r in group], jnp.int32),
+            r2_override=jnp.asarray([r.r2_override for r in group], jnp.int32),
+            initial_pe=jnp.asarray([r.initial_pe for r in group], jnp.int32),
+        )
+        if verbose:
+            print(f"# sweep group policy={geometry.POLICY_NAMES[pol]}: "
+                  f"{len(group)} runs in one jit", flush=True)
+        states = _sweep_jit(cfg, lpns, ops, has_writes, knobs)
+        for i, r in enumerate(group):
+            m = engine.summarize(_take_run(states, i), cfg, threads=threads)
+            m["run"] = dict(
+                scenario=r.scenario,
+                policy=geometry.POLICY_NAMES[r.policy],
+                initial_pe=r.initial_pe,
+                seed=r.seed,
+                r1=r.r1,
+                r2_override=r.r2_override,
+                n_requests=spec.n_requests,
+                tag=r.tag(),
+            )
+            results.append(m)
+    return results
+
+
+# --------------------------- result artifacts ------------------------------
+
+_ROW_UNITS = {
+    "iops": "IOPS",
+    "mean_read_latency_us": "us",
+    "read_lat_p50_us": "us",
+    "read_lat_p95_us": "us",
+    "read_lat_p99_us": "us",
+    "read_lat_p999_us": "us",
+    "retries_per_read": "retries",
+    "capacity_gib": "GiB",
+    "capacity_loss_gib": "GiB",
+    "migrated_pages": "pages",
+    "erases": "erases",
+    "reads": "reads",
+    "writes": "writes",
+}
+
+
+def result_rows(res: dict, prefix: str = "sweep"):
+    """Flatten one run result into harness-style (name, value, unit) rows."""
+    tag = res["run"]["tag"]
+    return [
+        (f"{prefix}/{tag}/{k}", float(res[k]), u)
+        for k, u in _ROW_UNITS.items()
+        if k in res
+    ]
+
+
+def write_artifacts(results, out_dir, prefix: str = "sweep") -> list[Path]:
+    """One ``BENCH_<tag>.json`` per run, mirroring the harness CSV rows so
+    artifacts and stdout stay diffable against each other."""
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    paths = []
+    for res in results:
+        doc = {
+            "name": f"{prefix}/{res['run']['tag']}",
+            "run": res["run"],
+            "metrics": {
+                k: (np.asarray(v).tolist() if isinstance(v, np.ndarray) else float(v))
+                for k, v in res.items()
+                if k != "run"
+            },
+            "rows": [list(r) for r in result_rows(res, prefix)],
+        }
+        p = out / f"BENCH_{prefix}_{res['run']['tag']}.json"
+        p.write_text(json.dumps(doc, indent=1, sort_keys=True))
+        paths.append(p)
+    return paths

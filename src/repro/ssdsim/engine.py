@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import hotness, modes, reclaim, retry
-from repro.ssdsim import ftl, geometry, policies
+from repro.ssdsim import ftl, geometry, policies, telemetry
 from repro.ssdsim import state as st
 
 OP_READ = 0
@@ -32,6 +32,7 @@ class ChunkMetrics(NamedTuple):
     retries: jnp.ndarray
     svc_ms: jnp.ndarray  # total read service time this chunk
     migrated: jnp.ndarray
+    lat_hist: jnp.ndarray  # (telemetry.N_LAT_BINS,) this chunk's read latencies
 
 
 def lookup(s: st.SSDState, lpns, cfg: geometry.SimConfig):
@@ -113,7 +114,11 @@ def _write_path(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig):
     return s
 
 
-def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool):
+def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
+               knobs: policies.RunKnobs | None = None):
+    """One engine step. ``knobs`` optionally supplies traced overrides for
+    the batchable policy/wear knobs (sweep runner); ``None`` reads them from
+    ``cfg`` as before."""
     lpns, ops = req
     is_read = ops == OP_READ
 
@@ -130,6 +135,9 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool):
     chunk_reads = rd.sum().astype(jnp.float32)
     chunk_retries = jnp.where(rd, retries, 0).sum().astype(jnp.float32)
     chunk_svc = (svc_us + xfer_us).sum() / 1000.0
+    chunk_hist = telemetry.record(
+        jnp.zeros((telemetry.N_LAT_BINS,), jnp.float32), svc_us + xfer_us, rd
+    )
 
     s = s._replace(
         lun_busy_ms=s.lun_busy_ms + lun_add,
@@ -139,6 +147,7 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool):
         svc_sum_ms=s.svc_sum_ms + chunk_svc,
         n_reads=s.n_reads + chunk_reads,
         n_retries=s.n_retries + chunk_retries,
+        lat_hist=s.lat_hist + chunk_hist,
     )
 
     # ---------------- heat update ----------------
@@ -157,7 +166,7 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool):
         slot_u, blk_u, mode_u, retr_u, ok_u = lookup(s, uniq, cfg)
         heat_u = s.heat[jnp.maximum(uniq, 0)]
         sel = policies.select_migrations(
-            cfg, uniq, mode_u, retr_u, heat_u, ok_u, s.block_pe[blk_u]
+            cfg, uniq, mode_u, retr_u, heat_u, ok_u, s.block_pe[blk_u], knobs=knobs
         )
         for tgt in (modes.SLC, modes.TLC):
             s = ftl.maybe_migrate_pages(s, sel[tgt], tgt, cfg)
@@ -180,8 +189,17 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool):
             eligible_mode = jnp.where(
                 s.block_state == st.FULL, s.block_mode, modes.QLC
             )  # only FULL low-density blocks are demotable
+            # Per-block residual heat = max heat over the block's valid pages
+            # (the demotion tie-breaker: among equally long-cold blocks, the
+            # one with the least residual heat demotes first).
+            slot_blk = jnp.arange(cfg.n_slots, dtype=jnp.int32) // cfg.slots_per_block
+            page_heat = jnp.where(s.p2l >= 0, s.heat[jnp.maximum(s.p2l, 0)], 0.0)
+            block_heat = jnp.maximum(
+                jax.ops.segment_max(page_heat, slot_blk, num_segments=cfg.n_blocks),
+                0.0,
+            )
             mask, tgt_modes = reclaim.select_demotions(
-                eligible_mode, jnp.zeros_like(s.block_cold_age, jnp.float32),
+                eligible_mode, block_heat,
                 s.block_cold_age, free_frac, rcfg,
             )
             score = jnp.where(mask, s.block_cold_age, -1)
@@ -209,6 +227,7 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool):
         retries=chunk_retries,
         svc_ms=chunk_svc,
         migrated=s.n_migrated_pages,
+        lat_hist=chunk_hist,
     )
     return s, y
 
@@ -249,9 +268,14 @@ def summarize(s: st.SSDState, cfg: geometry.SimConfig, threads: int = 4):
         iops = n_reads / max(makespan_ms / 1000.0, 1e-9)
     cap = float(st.capacity_gib(s, cfg))
     init_cap = cfg.n_blocks * cfg.slots_per_block * cfg.page_bytes / 2**30
+    pct = telemetry.percentiles(s.lat_hist)
     return dict(
         iops=iops,
         mean_read_latency_us=mean_lat_ms * 1000.0,
+        read_lat_p50_us=pct[0.5],
+        read_lat_p95_us=pct[0.95],
+        read_lat_p99_us=pct[0.99],
+        read_lat_p999_us=pct[0.999],
         retries_per_read=float(s.n_retries) / max(n_reads, 1.0),
         capacity_gib=cap,
         capacity_loss_gib=init_cap - cap,

@@ -12,6 +12,8 @@ vectorized), and emit -1-padded lpn lists per target mode for
 
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax.numpy as jnp
 from jax import lax
 
@@ -19,7 +21,27 @@ from repro.core import hotness, modes, policy
 from repro.ssdsim import geometry
 
 
-def thresholds_for(cfg: geometry.SimConfig, pe_cycles):
+class RunKnobs(NamedTuple):
+    """Batchable per-run knobs (int32 scalars, may be traced/vmapped).
+
+    These are the SimConfig fields the sweep runner batches through
+    ``jax.vmap``: unlike ``policy`` or the geometry they never change trace
+    shapes, so a whole grid of (r1, r2_override, initial_pe) runs shares one
+    compiled program (DESIGN.md §7.3).
+    """
+
+    r1: jnp.ndarray
+    r2_override: jnp.ndarray  # < 0: use the paper's stage schedule
+    initial_pe: jnp.ndarray
+
+
+def thresholds_for(cfg: geometry.SimConfig, pe_cycles, knobs: RunKnobs | None = None):
+    if knobs is not None:
+        # Traced override: resolve r2 per element so a vmapped batch can mix
+        # explicit-R2 runs with stage-schedule runs.
+        stage_th = policy.stage_thresholds(pe_cycles)
+        r2 = jnp.where(knobs.r2_override >= 0, jnp.int32(knobs.r2_override), stage_th.r2)
+        return policy.Thresholds(jnp.int32(knobs.r1), r2)
     if cfg.r2_override >= 0:
         return policy.Thresholds(jnp.int32(cfg.r1), jnp.int32(cfg.r2_override))
     th = policy.stage_thresholds(pe_cycles, r1=cfg.r1)
@@ -27,7 +49,7 @@ def thresholds_for(cfg: geometry.SimConfig, pe_cycles):
 
 
 def select_migrations(cfg: geometry.SimConfig, uniq_lpns, page_mode, page_retries,
-                      page_heat, page_ok, pe_cycles):
+                      page_heat, page_ok, pe_cycles, knobs: RunKnobs | None = None):
     """Select up to M pages per target mode to migrate this chunk.
 
     Returns dict {mode: (M,) int32 lpns, -1-padded}, hottest-first.
@@ -36,7 +58,7 @@ def select_migrations(cfg: geometry.SimConfig, uniq_lpns, page_mode, page_retrie
     cls = hotness.classify(page_heat, cfg.heat)
 
     if cfg.policy == geometry.RARO:
-        th = thresholds_for(cfg, pe_cycles)
+        th = thresholds_for(cfg, pe_cycles, knobs)
         target = policy.migration_decision(page_mode, cls, page_retries, th)
     elif cfg.policy == geometry.HOTNESS:
         target = policy.hotness_only_decision(page_mode, cls)

@@ -11,7 +11,7 @@ from typing import NamedTuple
 import jax.numpy as jnp
 
 from repro.core import modes
-from repro.ssdsim import geometry
+from repro.ssdsim import geometry, telemetry
 
 FREE = 0
 OPEN = 1
@@ -45,6 +45,9 @@ class SSDState(NamedTuple):
     lun_busy_ms: jnp.ndarray  # (n_luns,) f32 — cumulative busy time
     chan_busy_ms: jnp.ndarray  # (n_channels,) f32
 
+    # telemetry
+    lat_hist: jnp.ndarray  # (telemetry.N_LAT_BINS,) f32 read-latency histogram
+
     # counters (f32 scalars; summed per-chunk so precision is fine)
     svc_sum_ms: jnp.ndarray  # total user-read service time (latency + xfer)
     n_reads: jnp.ndarray
@@ -55,11 +58,16 @@ class SSDState(NamedTuple):
     n_conversions: jnp.ndarray  # (3,3) from-mode x to-mode counts
 
 
-def init_state(cfg: geometry.SimConfig) -> SSDState:
+def init_state(cfg: geometry.SimConfig, initial_pe=None) -> SSDState:
     """Pre-filled device: L logical pages written sequentially into QLC
     blocks (LUN-striped by block id), remaining blocks free. Matches the
     paper's setup: 'Initially, the block types of the hybrid SSD are set to
-    the QLC mode'."""
+    the QLC mode'.
+
+    ``initial_pe`` optionally overrides ``cfg.initial_pe`` with a traced
+    scalar so a batch of wear stages can share one jitted sweep (vmap over
+    the run axis — see repro.experiments.sweep).
+    """
     B, S, L = cfg.n_blocks, cfg.n_slots, cfg.n_logical
     spb = cfg.slots_per_block
     assert L <= S, "working set must fit the device"
@@ -83,7 +91,7 @@ def init_state(cfg: geometry.SimConfig) -> SSDState:
         page_write_ms=jnp.zeros((S,), jnp.float32),
         block_mode=jnp.full((B,), modes.QLC, jnp.int32),
         block_state=block_state,
-        block_pe=jnp.full((B,), cfg.initial_pe, jnp.int32),
+        block_pe=jnp.full((B,), jnp.int32(cfg.initial_pe if initial_pe is None else initial_pe)),
         block_reads=jnp.zeros((B,), jnp.int32),
         block_next=block_next,
         block_valid=block_valid,
@@ -91,6 +99,7 @@ def init_state(cfg: geometry.SimConfig) -> SSDState:
         heat=jnp.zeros((L,), jnp.float32),
         open_user=jnp.full((cfg.n_luns,), -1, jnp.int32),
         open_mig=jnp.full((3,), -1, jnp.int32),
+        lat_hist=jnp.zeros((telemetry.N_LAT_BINS,), jnp.float32),
         clock_ms=jnp.float32(0.0),
         lun_busy_ms=jnp.zeros((cfg.n_luns,), jnp.float32),
         chan_busy_ms=jnp.zeros((cfg.n_channels,), jnp.float32),

@@ -1,0 +1,73 @@
+"""Tail-latency telemetry (DESIGN.md §7.1).
+
+Read retries hurt the *tail* of the read-latency distribution far more than
+the mean (Park et al., read-retry optimization; Cai et al., flash error
+characterization), so the engine accumulates a fixed log-spaced histogram of
+per-read service latency inside the jitted ``lax.scan``. Fixed edges keep
+the accumulator a static-shape array (vmap/jit friendly: a batch of runs is
+just a stacked ``(R, N_LAT_BINS)`` histogram); log spacing gives ~2% relative
+resolution per bin across four decades, which is enough to read off
+p50/p95/p99/p999 without storing per-request samples.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Histogram geometry: 16 bins per decade from 8 us to 80 ms. The fastest
+# possible read is an SLC sense (20 us); the slowest user read is a QLC page
+# at the retry-table cap (140 us * 17 ~= 2.4 ms) plus channel transfer, so
+# four decades bracket the achievable range with headroom on both sides.
+LAT_MIN_US = 8.0
+BINS_PER_DECADE = 16
+N_LAT_BINS = 64
+
+
+def bin_edges_us() -> np.ndarray:
+    """(N_LAT_BINS + 1,) log-spaced bin edges in microseconds."""
+    exp = np.arange(N_LAT_BINS + 1, dtype=np.float64) / BINS_PER_DECADE
+    return LAT_MIN_US * 10.0**exp
+
+
+def latency_bin(lat_us):
+    """Bin index for a latency in microseconds (traced-safe, clipped)."""
+    lat = jnp.maximum(jnp.asarray(lat_us, jnp.float32), LAT_MIN_US)
+    idx = jnp.floor(jnp.log10(lat / LAT_MIN_US) * BINS_PER_DECADE)
+    return jnp.clip(idx.astype(jnp.int32), 0, N_LAT_BINS - 1)
+
+
+def record(hist, lat_us, mask):
+    """Scatter the masked latencies into ``hist`` ((N_LAT_BINS,) f32).
+
+    Runs inside the engine's scan body; masked-out lanes are dropped via an
+    out-of-range index (the repo-wide scatter discipline).
+    """
+    idx = jnp.where(mask, latency_bin(lat_us), N_LAT_BINS)
+    return hist.at[idx].add(1.0, mode="drop")
+
+
+def percentiles(hist, qs=(0.5, 0.95, 0.99, 0.999)) -> dict[float, float]:
+    """Extract latency quantiles (us) from a histogram by log interpolation.
+
+    ``hist`` is a (N_LAT_BINS,) count array (any float/int dtype, host or
+    device). Within the selected bin the quantile position interpolates
+    geometrically between the bin edges; an empty histogram returns 0.0.
+    """
+    h = np.asarray(hist, np.float64)
+    total = h.sum()
+    edges = bin_edges_us()
+    out = {}
+    if total <= 0:
+        return {q: 0.0 for q in qs}
+    cum = np.cumsum(h)
+    for q in qs:
+        target = q * total
+        b = int(np.searchsorted(cum, target, side="left"))
+        b = min(b, N_LAT_BINS - 1)
+        prev = cum[b - 1] if b > 0 else 0.0
+        frac = (target - prev) / max(h[b], 1e-12)
+        frac = min(max(frac, 0.0), 1.0)
+        lo, hi = edges[b], edges[b + 1]
+        out[q] = float(lo * (hi / lo) ** frac)
+    return out

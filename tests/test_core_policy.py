@@ -3,8 +3,7 @@ aggregation and elastic reclaim."""
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hyp_fallback import given, settings, st
 
 from repro.core import controller, hotness, modes, policy, reclaim
 

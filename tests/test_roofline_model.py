@@ -26,7 +26,10 @@ def test_analytic_flops_matches_compiled_one_layer(arch):
 
     step = ts.make_train_step(cfg, optim.AdamWConfig())
     compiled = jax.jit(step).lower(params_abs, o_abs, inputs).compile()
-    hlo_flops = float(compiled.cost_analysis().get("flops", 0.0))
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # pre-0.5 jax returns one dict per device
+        ca = ca[0]
+    hlo_flops = float(ca.get("flops", 0.0))
     analytic = model_flops(cfg, SMALL_TRAIN)["total"]
 
     # same order of magnitude and within 35% — the analytic model is used

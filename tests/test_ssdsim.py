@@ -3,8 +3,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st_h
+from hyp_fallback import given, settings
+from hyp_fallback import st as st_h
 
 from repro.core import modes
 from repro.ssdsim import engine, ftl, geometry, state as st, workload

@@ -1,0 +1,104 @@
+"""Unit tests for the host-side workload generators (repro.ssdsim.workload):
+packing invariants, distribution properties, determinism."""
+
+import numpy as np
+
+from repro.ssdsim import geometry, workload
+from repro.ssdsim.engine import OP_READ, OP_WRITE
+
+TINY = geometry.tiny_config()
+
+
+class TestPack:
+    def test_pads_to_chunk_multiple(self):
+        n = TINY.chunk + 7  # forces one padded chunk
+        lpn = np.arange(n, dtype=np.int32)
+        op = np.full(n, OP_READ, np.int32)
+        tr = workload._pack(TINY, lpn, op)
+        n_chunks = -(-n // TINY.chunk)
+        assert tr["lpn"].shape == (n_chunks, TINY.chunk)
+        assert tr["op"].shape == (n_chunks, TINY.chunk)
+
+    def test_padding_is_invalid_reads(self):
+        n = TINY.chunk - 3
+        tr = workload._pack(TINY, np.arange(n, dtype=np.int32),
+                            np.full(n, OP_WRITE, np.int32))
+        flat_lpn = tr["lpn"].reshape(-1)
+        flat_op = tr["op"].reshape(-1)
+        # padding lanes are lpn == -1 with a harmless read op
+        assert (flat_lpn[n:] == -1).all()
+        assert (flat_op[n:] == OP_READ).all()
+        # payload is untouched
+        np.testing.assert_array_equal(flat_lpn[:n], np.arange(n))
+        assert (flat_op[:n] == OP_WRITE).all()
+
+    def test_exact_multiple_has_no_padding(self):
+        n = 2 * TINY.chunk
+        tr = workload._pack(TINY, np.zeros(n, np.int32), np.full(n, OP_READ, np.int32))
+        assert tr["lpn"].shape == (2, TINY.chunk)
+        assert (tr["lpn"] >= 0).all()
+
+    def test_dtypes(self):
+        tr = workload._pack(TINY, np.arange(10, dtype=np.int64),
+                            np.full(10, OP_READ, np.int64))
+        assert tr["lpn"].dtype == np.int32 and tr["op"].dtype == np.int32
+
+
+class TestZipfProbs:
+    def test_normalized(self):
+        for theta in (0.0, 0.6, 1.2, 2.0):
+            p = workload.zipf_probs(1000, theta)
+            assert abs(p.sum() - 1.0) < 1e-12
+            assert (p >= 0).all()
+
+    def test_monotone_decreasing_in_rank(self):
+        p = workload.zipf_probs(100, 1.2)
+        assert (np.diff(p) <= 0).all()
+
+    def test_theta_zero_is_uniform(self):
+        p = workload.zipf_probs(50, 0.0)
+        np.testing.assert_allclose(p, 1.0 / 50)
+
+    def test_higher_theta_more_skewed(self):
+        lo = workload.zipf_probs(100, 0.8)
+        hi = workload.zipf_probs(100, 1.5)
+        assert hi[0] > lo[0]
+
+
+class TestTraces:
+    def test_mixed_trace_read_fraction(self):
+        n = 20_000
+        tr = workload.mixed_trace(TINY, n, 1.2, read_frac=0.7, seed=0)
+        reads = (tr["op"].reshape(-1)[:n] == OP_READ).sum()
+        assert abs(reads / n - 0.7) < 0.02  # binomial tolerance
+
+    def test_lpns_in_range(self):
+        for tr in (
+            workload.zipf_read_trace(TINY, 5_000, 1.2, seed=3),
+            workload.uniform_read_trace(TINY, 5_000, seed=3),
+            workload.seq_read_trace(TINY, 5_000, start=17),
+            workload.mixed_trace(TINY, 5_000, 1.0, seed=3),
+        ):
+            lpn = tr["lpn"].reshape(-1)
+            assert lpn.max() < TINY.n_logical
+            assert lpn.min() >= -1
+
+    def test_deterministic_under_fixed_seed(self):
+        a = workload.zipf_read_trace(TINY, 4_000, 1.2, seed=9)
+        b = workload.zipf_read_trace(TINY, 4_000, 1.2, seed=9)
+        np.testing.assert_array_equal(a["lpn"], b["lpn"])
+        m1 = workload.mixed_trace(TINY, 4_000, 1.2, seed=9)
+        m2 = workload.mixed_trace(TINY, 4_000, 1.2, seed=9)
+        np.testing.assert_array_equal(m1["lpn"], m2["lpn"])
+        np.testing.assert_array_equal(m1["op"], m2["op"])
+
+    def test_different_seeds_differ(self):
+        a = workload.zipf_read_trace(TINY, 4_000, 1.2, seed=1)
+        b = workload.zipf_read_trace(TINY, 4_000, 1.2, seed=2)
+        assert (a["lpn"] != b["lpn"]).any()
+
+    def test_seq_trace_wraps(self):
+        tr = workload.seq_read_trace(TINY, TINY.n_logical + 10, start=0)
+        lpn = tr["lpn"].reshape(-1)[: TINY.n_logical + 10]
+        np.testing.assert_array_equal(lpn[:5], [0, 1, 2, 3, 4])
+        np.testing.assert_array_equal(lpn[TINY.n_logical:], np.arange(10))
