@@ -1,0 +1,122 @@
+"""Engine-throughput benchmark (DESIGN.md §2A): chunks/sec for the simulator
+hot path, measured separately for read-only and mixed read/write traces.
+
+The paper's headline figures (13-18) come from mixed traces, so this script
+is the regression guard for the vectorized write path and the fused reclaim
+pass: it reports steady-state chunks/sec and wall-clock per chunk (compile
+excluded, measured separately) and emits a ``BENCH_engine.json`` artifact in
+the same ``name,value,unit`` row format as the rest of the harness.
+
+  PYTHONPATH=src python -m benchmarks.engine_bench [--tiny] [--repeats N]
+      [--out DIR]
+
+``--tiny`` runs the unit-test geometry (CI smoke); the default is a mid-size
+geometry large enough that per-chunk work dominates dispatch overhead.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+
+def bench_config(tiny: bool):
+    from repro.ssdsim import geometry
+
+    if tiny:
+        return geometry.tiny_config(policy=geometry.RARO, initial_pe=500)
+    return geometry.SimConfig(
+        blocks_per_plane=64,  # 256 blocks
+        slots_per_block=256,
+        n_logical=32_768,  # half the device, like the paper's 8 GiB / 16 GiB
+        chunk=512,
+        migrate_pages_per_chunk=64,
+        max_conversions_per_chunk=4,
+        gc_free_threshold=4,
+        policy=geometry.RARO,
+        initial_pe=500,
+    )
+
+
+def _traces(cfg, n_requests: int):
+    from repro.ssdsim import workload
+
+    return {
+        "read_only": (workload.zipf_read_trace(cfg, n_requests, 1.2, seed=1), False),
+        "mixed": (workload.mixed_trace(cfg, n_requests, 1.2, read_frac=0.7, seed=1), True),
+    }
+
+
+def bench_engine(cfg, n_requests: int, repeats: int):
+    """Yield (name, value, unit) rows; compile time via AOT lower/compile so
+    the steady-state timing loop never pays tracing cost."""
+    from repro.ssdsim import engine
+
+    for wl, (trace, has_writes) in _traces(cfg, n_requests).items():
+        lpns = jnp.asarray(trace["lpn"], jnp.int32)
+        ops = jnp.asarray(trace["op"], jnp.int32)
+        n_chunks = lpns.shape[0]
+
+        t0 = time.perf_counter()
+        compiled = engine._run_jit.lower(cfg, lpns, ops, has_writes).compile()
+        compile_s = time.perf_counter() - t0
+
+        jax.block_until_ready(compiled(lpns, ops))  # warm-up / page in
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            jax.block_until_ready(compiled(lpns, ops))
+        dt = (time.perf_counter() - t0) / repeats
+
+        yield f"engine/{wl}/compile_s", compile_s, "s"
+        yield f"engine/{wl}/ms_per_chunk", dt / n_chunks * 1e3, "ms"
+        yield f"engine/{wl}/chunks_per_sec", n_chunks / dt, "chunks/s"
+        yield f"engine/{wl}/requests_per_sec", n_chunks * cfg.chunk / dt, "req/s"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true", help="unit-test geometry (CI smoke)")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--out", default=".", metavar="DIR",
+                    help="directory for the BENCH_engine.json artifact")
+    args = ap.parse_args()
+
+    cfg = bench_config(args.tiny)
+    n_requests = args.requests or (4 * cfg.chunk if args.tiny else 40 * cfg.chunk)
+
+    rows = []
+    print("name,value,unit")
+    for row in bench_engine(cfg, n_requests, args.repeats):
+        rows.append(list(row))
+        n, v, u = row
+        print(f"{n},{v:.4f},{u}", flush=True)
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    doc = {
+        "bench": "engine",
+        "config": {
+            "tiny": args.tiny,
+            "n_blocks": cfg.n_blocks,
+            "slots_per_block": cfg.slots_per_block,
+            "n_logical": cfg.n_logical,
+            "chunk": cfg.chunk,
+            "policy": cfg.policy,
+            "n_requests": n_requests,
+            "repeats": args.repeats,
+        },
+        "rows": rows,
+    }
+    p = out / "BENCH_engine.json"
+    p.write_text(json.dumps(doc, indent=1, sort_keys=True))
+    print(f"# wrote {p}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,14 +1,39 @@
 """Benchmark harness — one section per paper table/figure plus the Layer-B
-(TPU) tiered-KV benchmark. Prints ``name,value,unit`` CSV.
+(TPU) tiered-KV benchmark. Prints ``name,value,unit`` CSV; with
+``--artifacts DIR`` every section also writes a ``BENCH_<section>.json``
+artifact carrying the same rows (the sweep section additionally writes its
+per-run artifacts, as before).
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only SUBSTR]
+      [--artifacts DIR]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+from pathlib import Path
+
+
+def _write_section_artifact(out_dir: str, section: str, rows: list) -> Path:
+    """One ``BENCH_<section>.json`` mirroring the section's CSV rows — the
+    same name/value/unit format the sweep runner emits per run. Non-finite
+    values become null so the artifact stays strict RFC-8259 JSON."""
+    def _clean(v):
+        if isinstance(v, float) and (v != v or v in (float("inf"), float("-inf"))):
+            return None
+        return v
+
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    p = out / f"BENCH_{section}.json"
+    p.write_text(
+        json.dumps({"section": section, "rows": [[_clean(v) for v in r] for r in rows]},
+                   indent=1, sort_keys=True)
+    )
+    return p
 
 
 def main() -> None:
@@ -16,7 +41,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true", help="reduced request counts")
     ap.add_argument("--only", default=None)
     ap.add_argument("--artifacts", default=None, metavar="DIR",
-                    help="write per-run BENCH_*.json sweep artifacts here")
+                    help="write BENCH_*.json artifacts here (one per section, "
+                         "plus the sweep section's per-run artifacts)")
     args = ap.parse_args()
 
     from benchmarks import paper_figs, sweep_bench, tiered_kv
@@ -45,10 +71,15 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
+            rows = []
             for row in fn():
+                rows.append(row)
                 n, v, u = row
                 v = f"{v:.4f}" if isinstance(v, float) else v
                 print(f"{n},{v},{u}", flush=True)
+            if args.artifacts:
+                p = _write_section_artifact(args.artifacts, name, rows)
+                print(f"# wrote {p}", flush=True)
             print(f"# section {name} took {time.time()-t0:.1f}s", flush=True)
         except Exception as e:  # keep the harness going
             failures += 1

@@ -63,3 +63,25 @@ def select_demotions(block_mode, block_heat, cold_age, free_frac, cfg: ReclaimCo
 
     target = jnp.where(mask, jnp.minimum(jnp.asarray(block_mode, jnp.int32) + 1, modes.QLC), block_mode)
     return mask, target
+
+
+def select_demotion_victims(block_mode, block_heat, cold_age, free_frac,
+                            cfg: ReclaimConfig):
+    """Fused victim selection for the engine hot path: one ``lax.top_k``
+    replaces the per-candidate argmax loop of the dense-mask API above.
+
+    Returns ``(victims, ok, target)``: up to ``max_per_pass`` block ids
+    ordered best-candidate-first, a validity lane mask, and each victim's
+    one-level demotion target mode. Selection semantics match
+    :func:`select_demotions` (same scores, hysteresis and watermark).
+    """
+    scores = demotion_scores(block_mode, block_heat, cold_age)
+    eligible = (scores > -jnp.inf) & (jnp.asarray(cold_age) >= cfg.cold_epochs)
+    under_pressure = jnp.asarray(free_frac) < cfg.low_watermark
+
+    k = min(cfg.max_per_pass, block_mode.shape[-1])
+    masked = jnp.where(eligible & under_pressure, scores, -jnp.inf)
+    vals, victims = jax.lax.top_k(masked, k)
+    ok = vals > -jnp.inf
+    target = jnp.minimum(jnp.asarray(block_mode, jnp.int32)[victims] + 1, modes.QLC)
+    return victims.astype(jnp.int32), ok, target

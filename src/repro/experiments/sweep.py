@@ -177,6 +177,10 @@ _ROW_UNITS = {
     "read_lat_p95_us": "us",
     "read_lat_p99_us": "us",
     "read_lat_p999_us": "us",
+    "write_lat_p50_us": "us",
+    "write_lat_p95_us": "us",
+    "write_lat_p99_us": "us",
+    "write_lat_p999_us": "us",
     "retries_per_read": "retries",
     "capacity_gib": "GiB",
     "capacity_loss_gib": "GiB",

@@ -200,7 +200,8 @@ def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
         )
         args = (params_abs, cache_abs, inputs["tokens"], inputs["pos"])
 
-    with jax.set_mesh(mesh):
+    # jax.set_mesh only exists on newer jax; Mesh is itself a context manager
+    with jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh:
         t0 = time.time()
         lowered = fn.lower(*args)
         t_lower = time.time() - t0

@@ -60,7 +60,8 @@ def run(arch: str, *, smoke: bool = True, steps: int = 300, batch: int = 16,
 
     hist = []
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    # jax.set_mesh only exists on newer jax; Mesh is itself a context manager
+    with jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh:
         for step in range(start, steps):
             b = data.batch_at(step)
             b = {k: jnp.asarray(v) for k, v in b.items()}

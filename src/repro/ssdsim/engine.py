@@ -1,10 +1,12 @@
 """Chunked vectorized simulation engine (DESIGN.md §2A).
 
 One engine step processes ``cfg.chunk`` requests: reads are fully
-vectorized (metadata gathers + segment-sum accounting), then the policy's
-per-read trigger pipeline runs on the chunk's unique read set, conversions/
-reclaim/GC execute as background FTL tasks, exactly like FEMU's background
-loop between request bursts.
+vectorized (metadata gathers + segment-sum accounting), user writes run
+through the batched write path (per-LUN prefix sums + masked scatters; the
+sequential scan survives only as the test reference), then the policy's
+per-read trigger pipeline runs on the chunk's unique read set and
+conversions/reclaim/GC execute as pressure-gated background FTL tasks,
+exactly like FEMU's background loop between request bursts.
 """
 
 from __future__ import annotations
@@ -33,6 +35,7 @@ class ChunkMetrics(NamedTuple):
     svc_ms: jnp.ndarray  # total read service time this chunk
     migrated: jnp.ndarray
     lat_hist: jnp.ndarray  # (telemetry.N_LAT_BINS,) this chunk's read latencies
+    w_lat_hist: jnp.ndarray  # (telemetry.N_LAT_BINS,) this chunk's write latencies
 
 
 def lookup(s: st.SSDState, lpns, cfg: geometry.SimConfig):
@@ -48,12 +51,18 @@ def lookup(s: st.SSDState, lpns, cfg: geometry.SimConfig):
     return slot, blk, mode, retries, ok
 
 
-def _write_path(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig):
-    """Sequential user-write path (inner scan; only traced for mixed
-    workloads). Writes append to the per-LUN open QLC block."""
+def write_path_reference(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig):
+    """Sequential user-write path — the original per-request ``lax.scan``.
+
+    Retained purely as the behavioral reference for
+    :func:`write_path_batched`; the property tests assert the two produce
+    equivalent state on arbitrary mixed traces (DESIGN.md §2A). The engine
+    itself always runs the batched path.
+    """
     spb = cfg.slots_per_block
     ppb = geometry.pages_per_block(cfg)
     ppb_q = ppb[modes.QLC]
+    w_lat_us = modes.WRITE_LATENCY_US[modes.QLC] + cfg.transfer_us
 
     def wstep(s, x):
         lpn, active = x
@@ -75,6 +84,7 @@ def _write_path(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig):
                 block_state=s.block_state.at[dd].set(
                     jnp.where(ok & need_new, st.OPEN, s.block_state[dd])
                 ),
+                free_count=s.free_count - jnp.where(ok & need_new, 1, 0),
             )
             # invalidate previous mapping
             old = s.l2p[lpn]
@@ -105,6 +115,7 @@ def _write_path(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig):
                     jnp.where(ok, modes.WRITE_LATENCY_US[modes.QLC] / 1000.0, 0.0)
                 ),
                 n_writes=s.n_writes + jnp.where(ok, 1.0, 0.0),
+                w_lat_hist=telemetry.record(s.w_lat_hist, w_lat_us, ok),
             )
             return s
 
@@ -112,6 +123,138 @@ def _write_path(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig):
 
     s, _ = lax.scan(wstep, s, (jnp.maximum(lpns, 0), is_write & (lpns >= 0)))
     return s
+
+
+def write_path_batched(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig):
+    """Vectorized user-write path (DESIGN.md §2A).
+
+    The chunk's writes are grouped by LUN and assigned destination slots with
+    per-LUN prefix sums against ``block_next``; open-block rollovers become a
+    small static unroll of allocation *events* (at most
+    ``n_luns * ceil(chunk / pages_per_qlc_block)``), replayed in request
+    order so allocation decisions match :func:`write_path_reference` exactly.
+    All L2P/P2L/timestamp/accounting updates are masked scatters — no
+    per-request scan.
+    """
+    spb = cfg.slots_per_block
+    ppb_q = int(geometry.pages_per_block_host(cfg)[modes.QLC])
+    C = lpns.shape[0]
+    nL, B = cfg.n_luns, cfg.n_blocks
+    S, L = cfg.n_slots, cfg.n_logical
+
+    lp = jnp.maximum(lpns, 0)
+    w = is_write & (lpns >= 0)
+    lun = (lp % nL).astype(jnp.int32)
+
+    # per-LUN write ranks via prefix sums
+    oh = (lun[:, None] == jnp.arange(nL, dtype=jnp.int32)[None, :]) & w[:, None]
+    cum = jnp.cumsum(oh.astype(jnp.int32), axis=0)
+    rank = jnp.take_along_axis(cum, lun[:, None], axis=1)[:, 0] - 1
+    nw = cum[-1]  # (nL,) writes per LUN
+
+    d0 = s.open_user
+    next0 = jnp.where(d0 >= 0, s.block_next[jnp.maximum(d0, 0)], 0)
+    avail0 = jnp.where(d0 >= 0, jnp.maximum(ppb_q - next0, 0), 0)
+
+    # ---- allocation events: one per open-block rollover ----
+    n_ev = -(-C // ppb_q)  # static: max fresh blocks per LUN per chunk
+    E = nL * n_ev
+    over = rank - avail0[lun]  # this write's slot count past the open block
+    is_trig = w & (over >= 0) & (over % ppb_q == 0)
+    ev = lun * n_ev + jnp.clip(over // ppb_q, 0, n_ev - 1)
+    pos_i = jnp.arange(C, dtype=jnp.int32)
+    trig_pos = (
+        jnp.full((E,), C, jnp.int32)
+        .at[jnp.where(is_trig, ev, E)]
+        .min(pos_i, mode="drop")
+    )
+    order = jnp.argsort(trig_pos)  # triggered events first, in request order
+
+    dest_ev = jnp.full((E,), -1, jnp.int32)
+    for j in range(E):  # static unroll; E is a handful of events
+        e = order[j]
+        active = trig_pos[e] < C
+        a = ftl.alloc_free_block(s, prefer_lun=e // n_ev, cfg=cfg)
+        got = active & (a >= 0)
+        aa = jnp.maximum(a, 0)
+        dest_ev = dest_ev.at[e].set(jnp.where(got, a, -1))
+        s = s._replace(
+            block_mode=s.block_mode.at[aa].set(
+                jnp.where(got, modes.QLC, s.block_mode[aa])
+            ),
+            block_state=s.block_state.at[aa].set(
+                jnp.where(got, st.OPEN, s.block_state[aa])
+            ),
+            free_count=s.free_count - jnp.where(got, 1, 0),
+        )
+
+    # ---- per-write destination slots ----
+    in_open = w & (over < 0)
+    ev_i = lun * n_ev + jnp.clip(jnp.maximum(over, 0) // ppb_q, 0, n_ev - 1)
+    dest_blk = jnp.where(in_open, d0[lun], dest_ev[ev_i])
+    off = jnp.where(in_open, next0[lun] + rank, jnp.maximum(over, 0) % ppb_q)
+    ok = w & (dest_blk >= 0)
+    db = jnp.maximum(dest_blk, 0)
+    slot = db * spb + off
+
+    # duplicate LPNs within the chunk: only the last successful write maps;
+    # earlier ones still consume slots and are immediately invalid
+    last_pos = (
+        jnp.full((L,), -1, jnp.int32)
+        .at[jnp.where(ok, lp, L)]
+        .max(pos_i, mode="drop")
+    )
+    is_last = ok & (last_pos[lp] == pos_i)
+
+    # invalidate pre-chunk mappings, once per unique written LPN
+    old = s.l2p[lp]
+    inv = is_last & (old >= 0)
+    old_safe = jnp.maximum(old, 0)
+
+    l2p = s.l2p.at[jnp.where(is_last, lp, L)].set(slot, mode="drop")
+    p2l = s.p2l.at[jnp.where(ok, slot, S)].set(jnp.where(is_last, lp, -1), mode="drop")
+    p2l = p2l.at[jnp.where(inv, old, S)].set(-1, mode="drop")
+    pwt = s.page_write_ms.at[jnp.where(ok, slot, S)].set(s.clock_ms, mode="drop")
+
+    oki = ok.astype(jnp.int32)
+    bn_add = jax.ops.segment_sum(oki, db, num_segments=B)
+    bv_add = jax.ops.segment_sum(is_last.astype(jnp.int32), db, num_segments=B)
+    bv_sub = jax.ops.segment_sum(inv.astype(jnp.int32), old_safe // spb, num_segments=B)
+    block_next = s.block_next + bn_add
+    block_valid = s.block_valid + bv_add - bv_sub
+    touched = bn_add > 0
+    block_state = jnp.where(
+        touched, jnp.where(block_next >= ppb_q, st.FULL, st.OPEN), s.block_state
+    )
+
+    # final open-block cursor per LUN (the scan's last-write outcome)
+    last_over = (nw - 1) - avail0
+    last_ev = jnp.arange(nL, dtype=jnp.int32) * n_ev + jnp.clip(
+        jnp.maximum(last_over, 0) // ppb_q, 0, n_ev - 1
+    )
+    d_last = jnp.where(last_over < 0, d0, dest_ev[last_ev])
+    last_full = block_next[jnp.maximum(d_last, 0)] >= ppb_q
+    open_user = jnp.where(
+        nw > 0, jnp.where((d_last >= 0) & ~last_full, d_last, -1), s.open_user
+    )
+
+    okc = jax.ops.segment_sum(oki, lun, num_segments=nL)
+    w_lat_us = modes.WRITE_LATENCY_US[modes.QLC] + cfg.transfer_us
+    return s._replace(
+        l2p=l2p,
+        p2l=p2l,
+        page_write_ms=pwt,
+        block_next=block_next,
+        block_valid=block_valid,
+        block_state=block_state,
+        open_user=open_user,
+        lun_busy_ms=s.lun_busy_ms
+        + okc * (modes.WRITE_LATENCY_US[modes.QLC] / 1000.0),
+        n_writes=s.n_writes + ok.sum().astype(jnp.float32),
+        w_lat_hist=telemetry.record(
+            s.w_lat_hist, jnp.full((C,), w_lat_us, jnp.float32), ok
+        ),
+    )
 
 
 def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
@@ -158,7 +301,11 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
 
     # ---------------- user writes ----------------
     if has_writes:
-        s = _write_path(s, lpns, ops == OP_WRITE, cfg)
+        w_hist0 = s.w_lat_hist
+        s = write_path_batched(s, lpns, ops == OP_WRITE, cfg)
+        chunk_w_hist = s.w_lat_hist - w_hist0
+    else:
+        chunk_w_hist = jnp.zeros((telemetry.N_LAT_BINS,), jnp.float32)
 
     # ---------------- policy: conversion migrations ----------------
     if cfg.policy != geometry.BASELINE:
@@ -186,28 +333,33 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
             )
             free_frac = ftl.free_block_count(s) / cfg.n_blocks
             rcfg = reclaim.ReclaimConfig(max_per_pass=cfg.max_conversions_per_chunk)
-            eligible_mode = jnp.where(
-                s.block_state == st.FULL, s.block_mode, modes.QLC
-            )  # only FULL low-density blocks are demotable
-            # Per-block residual heat = max heat over the block's valid pages
-            # (the demotion tie-breaker: among equally long-cold blocks, the
-            # one with the least residual heat demotes first).
-            slot_blk = jnp.arange(cfg.n_slots, dtype=jnp.int32) // cfg.slots_per_block
-            page_heat = jnp.where(s.p2l >= 0, s.heat[jnp.maximum(s.p2l, 0)], 0.0)
-            block_heat = jnp.maximum(
-                jax.ops.segment_max(page_heat, slot_blk, num_segments=cfg.n_blocks),
-                0.0,
+
+            def _reclaim_pass(s):
+                # Per-block residual heat = max heat over the block's valid
+                # pages (the demotion tie-breaker: among equally long-cold
+                # blocks, the one with the least residual heat demotes
+                # first). The full-device segment_max is hoisted here so it
+                # runs once per pass and — via the pressure cond below — only
+                # when a demotion can actually fire.
+                slot_blk = (
+                    jnp.arange(cfg.n_slots, dtype=jnp.int32) // cfg.slots_per_block
+                )
+                page_heat = jnp.where(s.p2l >= 0, s.heat[jnp.maximum(s.p2l, 0)], 0.0)
+                block_heat = jnp.maximum(
+                    jax.ops.segment_max(page_heat, slot_blk, num_segments=cfg.n_blocks),
+                    0.0,
+                )
+                eligible_mode = jnp.where(
+                    s.block_state == st.FULL, s.block_mode, modes.QLC
+                )  # only FULL low-density blocks are demotable
+                victims, v_ok, v_tgt = reclaim.select_demotion_victims(
+                    eligible_mode, block_heat, s.block_cold_age, free_frac, rcfg
+                )
+                return ftl.reclaim_victims(s, victims, v_ok, v_tgt, cfg)
+
+            s = lax.cond(
+                free_frac < rcfg.low_watermark, _reclaim_pass, lambda s_: s_, s
             )
-            mask, tgt_modes = reclaim.select_demotions(
-                eligible_mode, block_heat,
-                s.block_cold_age, free_frac, rcfg,
-            )
-            score = jnp.where(mask, s.block_cold_age, -1)
-            for _ in range(cfg.max_conversions_per_chunk):
-                b = jnp.argmax(score).astype(jnp.int32)
-                src = jnp.where(score[b] > 0, b, -1)
-                s = ftl.maybe_migrate_block(s, src, tgt_modes[jnp.maximum(b, 0)], cfg)
-                score = score.at[b].set(-1)
 
     # ---------------- GC ----------------
     s = ftl.gc_step(s, cfg)
@@ -228,6 +380,7 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
         svc_ms=chunk_svc,
         migrated=s.n_migrated_pages,
         lat_hist=chunk_hist,
+        w_lat_hist=chunk_w_hist,
     )
     return s, y
 
@@ -269,6 +422,7 @@ def summarize(s: st.SSDState, cfg: geometry.SimConfig, threads: int = 4):
     cap = float(st.capacity_gib(s, cfg))
     init_cap = cfg.n_blocks * cfg.slots_per_block * cfg.page_bytes / 2**30
     pct = telemetry.percentiles(s.lat_hist)
+    wpct = telemetry.percentiles(s.w_lat_hist)
     return dict(
         iops=iops,
         mean_read_latency_us=mean_lat_ms * 1000.0,
@@ -276,6 +430,10 @@ def summarize(s: st.SSDState, cfg: geometry.SimConfig, threads: int = 4):
         read_lat_p95_us=pct[0.95],
         read_lat_p99_us=pct[0.99],
         read_lat_p999_us=pct[0.999],
+        write_lat_p50_us=wpct[0.5],
+        write_lat_p95_us=wpct[0.95],
+        write_lat_p99_us=wpct[0.99],
+        write_lat_p999_us=wpct[0.999],
         retries_per_read=float(s.n_retries) / max(n_reads, 1.0),
         capacity_gib=cap,
         capacity_loss_gib=init_cap - cap,

@@ -1,10 +1,18 @@
 """FTL mechanics: block allocation, block-granularity migration/conversion
-(paper Fig. 8-10), greedy GC. Everything is jit-safe with static shapes;
-per-block operations work on the block's fixed slots_per_block window.
+(paper Fig. 8-10), greedy GC, fused reclaim demotion. Everything is jit-safe
+with static shapes; per-block operations work on the block's fixed
+slots_per_block window.
 
 Scatter discipline: masked-out lanes are redirected to an out-of-range index
 and dropped (``mode='drop'``) — never write a dummy in-range index, because
 duplicate-index ``set`` conflicts are unordered in XLA.
+
+Free-pool bookkeeping (DESIGN.md §2A): ``SSDState.free_count`` is the exact
+number of FREE blocks, incremented by ``_erase`` and decremented at the two
+places a FREE block is opened (``_place_pages`` and the engine write path).
+``SSDState.free_hint`` holds one candidate free block per LUN, refreshed on
+erase; ``alloc_free_block`` trusts a hint only after re-checking
+``block_state`` and falls back to the O(n_blocks) scan when no hint is live.
 """
 
 from __future__ import annotations
@@ -21,8 +29,8 @@ from repro.ssdsim import geometry, state as st
 MAX_DEST = 5
 
 
-def alloc_free_block(s: st.SSDState, prefer_lun=None, cfg: geometry.SimConfig | None = None):
-    """Index of a free block (prefer matching LUN), or -1 if none."""
+def _alloc_scan(s: st.SSDState, prefer_lun=None, cfg: geometry.SimConfig | None = None):
+    """Full block_state scan (slow path): free block, prefer matching LUN."""
     free = s.block_state == st.FREE
     if prefer_lun is not None:
         blk = jnp.arange(s.block_mode.shape[0], dtype=jnp.int32)
@@ -34,8 +42,33 @@ def alloc_free_block(s: st.SSDState, prefer_lun=None, cfg: geometry.SimConfig | 
     return jnp.where(score[idx] > 0, idx, -1)
 
 
+def alloc_free_block(s: st.SSDState, prefer_lun=None, cfg: geometry.SimConfig | None = None):
+    """Index of a free block (prefer matching LUN), or -1 if none.
+
+    O(1) fast path through the per-LUN free hints; the hint is validated
+    against ``block_state`` (hints go stale when consumed) and the full scan
+    runs only when it is dead. With ``prefer_lun`` only that LUN's hint is
+    trusted, so LUN affinity is never worse than the scan's.
+    """
+    hints = s.free_hint
+    live = (hints >= 0) & (s.block_state[jnp.maximum(hints, 0)] == st.FREE)
+    if prefer_lun is not None:
+        h = hints[prefer_lun]
+        hit = live[prefer_lun]
+    else:
+        j = jnp.argmax(live)
+        h = hints[j]
+        hit = live[j]
+    return lax.cond(
+        hit,
+        lambda: h.astype(jnp.int32),
+        lambda: _alloc_scan(s, prefer_lun, cfg),
+    )
+
+
 def free_block_count(s: st.SSDState):
-    return (s.block_state == st.FREE).sum()
+    """Exact FREE-block count, O(1) via the incremental bookkeeping."""
+    return s.free_count
 
 
 def _erase(s: st.SSDState, blk, cfg: geometry.SimConfig):
@@ -53,49 +86,36 @@ def _erase(s: st.SSDState, blk, cfg: geometry.SimConfig):
         block_next=s.block_next.at[blk].set(0),
         block_valid=s.block_valid.at[blk].set(0),
         block_cold_age=s.block_cold_age.at[blk].set(0),
+        free_count=s.free_count + 1,
+        free_hint=s.free_hint.at[lun].set(blk.astype(jnp.int32)),
         lun_busy_ms=s.lun_busy_ms.at[lun].add(erase_ms),
         n_erases=s.n_erases + 1.0,
     )
 
 
-def migrate_block(s: st.SSDState, src, tgt_mode, cfg: geometry.SimConfig):
-    """Move all valid pages of ``src`` into open migration block(s) of
-    ``tgt_mode``, then erase ``src``. This is both mode conversion
-    (tgt != src mode) and GC relocation (tgt == src mode).
+def _place_pages(s: st.SSDState, lpns, valid, tgt_mode, cfg: geometry.SimConfig,
+                 n_dest: int):
+    """Append the ``valid``-masked ``lpns`` into open migration block(s) of
+    ``tgt_mode``, opening up to ``n_dest`` fresh blocks from the free pool.
 
-    Latency accounting: each valid page costs one source-mode read (with its
-    Eq.-3 retry count) plus one target-mode program; the erase costs the
-    source-mode erase latency. Requires up to MAX_DEST destination blocks;
-    the caller guards on free_block_count.
+    Shared placement core of page migration, block migration and the fused
+    reclaim pass — besides the engine write path this is the only place FREE
+    blocks are consumed, so the free-pool bookkeeping lives here once.
+    Callers invalidate (or erase) the source slots themselves.
     """
     spb = cfg.slots_per_block
     ppb = geometry.pages_per_block(cfg)
-    S = cfg.n_slots
-    L = cfg.n_logical
+    S, L = cfg.n_slots, cfg.n_logical
 
-    src_mode = s.block_mode[src]
-    slots = src * spb + jnp.arange(spb, dtype=jnp.int32)
-    lpns = lax.dynamic_slice(s.p2l, (src * spb,), (spb,))
-    valid = lpns >= 0
-    n_valid = valid.sum()
-
-    # -- read cost of the source pages (Eq. 1 -> Eq. 3 per page) --
-    age_h = (
-        cfg.device_age_h
-        + (s.clock_ms - lax.dynamic_slice(s.page_write_ms, (src * spb,), (spb,))) / 3.6e6
-    )
-    retries = retry.page_retries(src_mode, s.block_pe[src], age_h, s.block_reads[src], slots)
-    read_ms = jnp.where(valid, retry.read_latency_us(src_mode, retries), 0.0).sum() / 1000.0
-    src_lun = src % cfg.n_luns
-    s = s._replace(lun_busy_ms=s.lun_busy_ms.at[src_lun].add(read_ms))
-
-    # -- place pages into up to MAX_DEST destination blocks --
+    lp_safe = jnp.maximum(lpns, 0)
     pos = jnp.cumsum(valid.astype(jnp.int32)) - 1  # rank of each valid page
+    n_valid = valid.sum()
     consumed = jnp.int32(0)
-    for _ in range(MAX_DEST):
-        d = s.open_mig[tgt_mode]
+    for _ in range(n_dest):
+        cur = s.open_mig[tgt_mode]
+        fresh = cur < 0
         a = alloc_free_block(s)
-        d = jnp.where(d < 0, a, d)
+        d = jnp.where(fresh, a, cur)
         dd = jnp.maximum(d, 0)  # safe index; all writes masked when d < 0
         usable = jnp.where(d >= 0, ppb[tgt_mode] - s.block_next[dd], 0)
         take = jnp.clip(n_valid - consumed, 0, usable)
@@ -113,13 +133,13 @@ def migrate_block(s: st.SSDState, src, tgt_mode, cfg: geometry.SimConfig):
             block_state=s.block_state.at[dd].set(
                 jnp.where(opened, st.OPEN, s.block_state[dd])
             ),
+            free_count=s.free_count - jnp.where(opened & fresh, 1, 0),
         )
         l2p = s.l2p.at[lp_idx].set(dest_slot, mode="drop")
-        p2l = s.p2l.at[dest_slot].set(lpns, mode="drop")
+        p2l = s.p2l.at[dest_slot].set(lp_safe, mode="drop")
         pwt = s.page_write_ms.at[dest_slot].set(s.clock_ms, mode="drop")
 
         write_ms = take * modes.WRITE_LATENCY_US[tgt_mode] / 1000.0
-        d_lun = dd % cfg.n_luns
         new_next = s.block_next[dd] + take
         is_full = new_next >= ppb[tgt_mode]
         s = s._replace(
@@ -132,15 +152,44 @@ def migrate_block(s: st.SSDState, src, tgt_mode, cfg: geometry.SimConfig):
                 jnp.where(opened & is_full, st.FULL, s.block_state.at[dd].get())
             ),
             open_mig=s.open_mig.at[tgt_mode].set(
-                jnp.where(
-                    opened,
-                    jnp.where(is_full, -1, d),
-                    s.open_mig[tgt_mode],
-                )
+                jnp.where(opened, jnp.where(is_full, -1, d), s.open_mig[tgt_mode])
             ),
-            lun_busy_ms=s.lun_busy_ms.at[d_lun].add(write_ms),
+            lun_busy_ms=s.lun_busy_ms.at[dd % cfg.n_luns].add(write_ms),
         )
         consumed = consumed + take
+    return s
+
+
+def migrate_block(s: st.SSDState, src, tgt_mode, cfg: geometry.SimConfig):
+    """Move all valid pages of ``src`` into open migration block(s) of
+    ``tgt_mode``, then erase ``src``. This is both mode conversion
+    (tgt != src mode) and GC relocation (tgt == src mode).
+
+    Latency accounting: each valid page costs one source-mode read (with its
+    Eq.-3 retry count) plus one target-mode program; the erase costs the
+    source-mode erase latency. Requires up to MAX_DEST destination blocks;
+    the caller guards on free_block_count.
+    """
+    spb = cfg.slots_per_block
+
+    src_mode = s.block_mode[src]
+    slots = src * spb + jnp.arange(spb, dtype=jnp.int32)
+    lpns = lax.dynamic_slice(s.p2l, (src * spb,), (spb,))
+    valid = lpns >= 0
+    n_valid = valid.sum()
+
+    # -- read cost of the source pages (Eq. 1 -> Eq. 3 per page) --
+    age_h = (
+        cfg.device_age_h
+        + (s.clock_ms - lax.dynamic_slice(s.page_write_ms, (src * spb,), (spb,))) / 3.6e6
+    )
+    retries = retry.page_retries(src_mode, s.block_pe[src], age_h, s.block_reads[src], slots)
+    read_ms = jnp.where(valid, retry.read_latency_us(src_mode, retries), 0.0).sum() / 1000.0
+    src_lun = src % cfg.n_luns
+    s = s._replace(lun_busy_ms=s.lun_busy_ms.at[src_lun].add(read_ms))
+
+    # source slots die with the erase below; no explicit invalidation needed
+    s = _place_pages(s, lpns, valid, tgt_mode, cfg, MAX_DEST)
 
     s = s._replace(
         n_migrated_pages=s.n_migrated_pages + n_valid,
@@ -165,8 +214,7 @@ def migrate_pages(s: st.SSDState, lpns, tgt_mode, cfg: geometry.SimConfig):
     ``lpns``: (M,) int32, -1-padded. M is static (cfg.migrate_pages_per_chunk).
     """
     spb = cfg.slots_per_block
-    ppb = geometry.pages_per_block(cfg)
-    S, L = cfg.n_slots, cfg.n_logical
+    S = cfg.n_slots
     M = lpns.shape[0]
 
     lp_safe = jnp.maximum(lpns, 0)
@@ -192,49 +240,7 @@ def migrate_pages(s: st.SSDState, lpns, tgt_mode, cfg: geometry.SimConfig):
     bv = s.block_valid - jax.ops.segment_sum(valid.astype(jnp.int32), src_blk, num_segments=s.block_valid.shape[0])
     s = s._replace(p2l=p2l, block_valid=bv)
 
-    # -- place into destination blocks of tgt_mode --
-    pos = jnp.cumsum(valid.astype(jnp.int32)) - 1
-    consumed = jnp.int32(0)
-    for _ in range(_dest_unroll(cfg, M)):
-        d = s.open_mig[tgt_mode]
-        a = alloc_free_block(s)
-        d = jnp.where(d < 0, a, d)
-        dd = jnp.maximum(d, 0)
-        usable = jnp.where(d >= 0, ppb[tgt_mode] - s.block_next[dd], 0)
-        take = jnp.clip(n_valid - consumed, 0, usable)
-        opened = (take > 0) & (d >= 0)
-        sel = valid & (pos >= consumed) & (pos < consumed + take) & opened
-
-        dest_off = s.block_next[dd] + (pos - consumed)
-        dest_slot = jnp.where(sel, dd * spb + dest_off, S)
-        lp_idx = jnp.where(sel, lpns, L)
-
-        s = s._replace(
-            block_mode=s.block_mode.at[dd].set(jnp.where(opened, tgt_mode, s.block_mode[dd])),
-            block_state=s.block_state.at[dd].set(jnp.where(opened, st.OPEN, s.block_state[dd])),
-        )
-        l2p = s.l2p.at[lp_idx].set(dest_slot, mode="drop")
-        p2l = s.p2l.at[dest_slot].set(lp_safe, mode="drop")
-        pwt = s.page_write_ms.at[dest_slot].set(s.clock_ms, mode="drop")
-
-        write_ms = take * modes.WRITE_LATENCY_US[tgt_mode] / 1000.0
-        new_next = s.block_next[dd] + take
-        is_full = new_next >= ppb[tgt_mode]
-        s = s._replace(
-            l2p=l2p,
-            p2l=p2l,
-            page_write_ms=pwt,
-            block_next=s.block_next.at[dd].add(jnp.where(opened, take, 0)),
-            block_valid=s.block_valid.at[dd].add(jnp.where(opened, take, 0)),
-            block_state=s.block_state.at[dd].set(
-                jnp.where(opened & is_full, st.FULL, s.block_state.at[dd].get())
-            ),
-            open_mig=s.open_mig.at[tgt_mode].set(
-                jnp.where(opened, jnp.where(is_full, -1, d), s.open_mig[tgt_mode])
-            ),
-            lun_busy_ms=s.lun_busy_ms.at[dd % cfg.n_luns].add(write_ms),
-        )
-        consumed = consumed + take
+    s = _place_pages(s, lpns, valid, tgt_mode, cfg, _dest_unroll(cfg, M))
 
     conv = jax.ops.segment_sum(valid.astype(jnp.float32), src_mode, num_segments=3)
     return s._replace(
@@ -268,14 +274,96 @@ def maybe_migrate_block(s: st.SSDState, src, tgt_mode, cfg: geometry.SimConfig):
     )
 
 
+def _demote_dest_unroll(cfg: geometry.SimConfig, tgt_mode: int, n_victims: int) -> int:
+    """Destination blocks needed by one fused demotion pass into ``tgt_mode``:
+    up to ``n_victims`` source blocks one density level below the target,
+    plus one partially-filled open block."""
+    ppb = geometry.pages_per_block_host(cfg)
+    src_pages = n_victims * int(ppb[tgt_mode - 1])
+    return -(-src_pages // int(ppb[tgt_mode])) + 1
+
+
+def _demote_group(s: st.SSDState, victims, grp, tgt_mode: int,
+                  cfg: geometry.SimConfig):
+    """Migrate every ``grp``-masked victim block into ``tgt_mode`` in one
+    placement pass, then erase the victims. The fused replacement for K
+    sequential ``migrate_block`` calls (DESIGN.md §2A)."""
+    K = victims.shape[0]
+    spb = cfg.slots_per_block
+
+    vb = jnp.maximum(victims, 0)
+    slots = vb[:, None] * spb + jnp.arange(spb, dtype=jnp.int32)[None, :]  # (K, spb)
+    lpns = jnp.where(grp[:, None], s.p2l[slots], -1)
+    valid = lpns >= 0
+    src_mode = s.block_mode[vb]  # (K,)
+
+    # -- read cost of all victim pages, one vectorized Eq.-3 pass --
+    age_h = cfg.device_age_h + (s.clock_ms - s.page_write_ms[slots]) / 3.6e6
+    retries = retry.page_retries(
+        src_mode[:, None], s.block_pe[vb][:, None], age_h, s.block_reads[vb][:, None], slots
+    )
+    rd_ms = jnp.where(valid, retry.read_latency_us(src_mode[:, None], retries), 0.0).sum(1) / 1000.0
+    lun_rd = jax.ops.segment_sum(
+        jnp.where(grp, rd_ms, 0.0), vb % cfg.n_luns, num_segments=cfg.n_luns
+    )
+    s = s._replace(lun_busy_ms=s.lun_busy_ms + lun_rd)
+
+    s = _place_pages(
+        s, lpns.reshape(-1), valid.reshape(-1), tgt_mode, cfg,
+        _demote_dest_unroll(cfg, tgt_mode, K),
+    )
+
+    conv_src = jnp.where(grp, src_mode, modes.N_MODES)  # N_MODES = dropped
+    s = s._replace(
+        n_migrated_pages=s.n_migrated_pages + valid.sum(),
+        n_conversions=s.n_conversions.at[conv_src, tgt_mode].add(1.0, mode="drop"),
+    )
+    for i in range(K):
+        s = lax.cond(
+            grp[i],
+            lambda s_, i=i: _erase(s_, vb[i], cfg),
+            lambda s_: s_,
+            s,
+        )
+    return s
+
+
+def reclaim_victims(s: st.SSDState, victims, v_ok, v_tgt, cfg: geometry.SimConfig):
+    """Fused reclaim demotion (paper §IV-E): the top-k victims selected by
+    ``reclaim.select_demotion_victims`` are migrated in at most two masked
+    passes (one per demotion target, SLC->TLC and TLC->QLC) instead of K
+    sequential block migrations. Each pass is cond-gated on having victims
+    and enough free destination blocks."""
+    K = victims.shape[0]
+    for tgt in (modes.TLC, modes.QLC):
+        grp = v_ok & (v_tgt == tgt) & (s.block_state[jnp.maximum(victims, 0)] == st.FULL)
+        ok = grp.any() & (free_block_count(s) >= _demote_dest_unroll(cfg, tgt, K) + 2)
+        s = lax.cond(
+            ok,
+            lambda s_, grp=grp, tgt=tgt: _demote_group(s_, victims, grp, tgt, cfg),
+            lambda s_: s_,
+            s,
+        )
+    return s
+
+
 def gc_step(s: st.SSDState, cfg: geometry.SimConfig):
-    """Greedy GC: relocate the FULL block with the fewest valid pages (and
-    at least one invalid page) when the free pool runs low."""
+    """Greedy GC, cond-gated on the free-pool watermark: with a healthy pool
+    the victim scan is skipped entirely, so GC can never fire above
+    ``cfg.gc_free_threshold``. (The idle branch is an explicit no-op now —
+    it previously still selected a victim and read its mode as the
+    relocation target.)"""
+    need = free_block_count(s) < cfg.gc_free_threshold
+    return lax.cond(need, lambda s_: _gc_pass(s_, cfg), lambda s_: s_, s)
+
+
+def _gc_pass(s: st.SSDState, cfg: geometry.SimConfig):
+    """Relocate the FULL block with the fewest valid pages (and at least one
+    invalid page); no-op via maybe_migrate_block when nothing is reclaimable."""
     ppb = geometry.pages_per_block(cfg)
     full = s.block_state == st.FULL
     reclaimable = full & (s.block_valid < ppb[s.block_mode])
     score = jnp.where(reclaimable, s.block_valid, jnp.iinfo(jnp.int32).max)
     victim = jnp.argmin(score).astype(jnp.int32)
-    need = free_block_count(s) < cfg.gc_free_threshold
-    src = jnp.where(need & reclaimable[victim], victim, -1)
-    return maybe_migrate_block(s, src, s.block_mode[jnp.maximum(victim, 0)], cfg)
+    src = jnp.where(reclaimable[victim], victim, -1)
+    return maybe_migrate_block(s, src, s.block_mode[victim], cfg)

@@ -104,3 +104,13 @@ def pages_per_block(cfg: SimConfig):
 
     ratio = modes.PAGES_PER_BLOCK / modes.PAGES_PER_BLOCK[modes.QLC]
     return jnp.maximum((ratio * cfg.slots_per_block).astype(jnp.int32), 1)
+
+
+def pages_per_block_host(cfg: SimConfig):
+    """Host-side (numpy) twin of :func:`pages_per_block`, for computing
+    static unroll bounds at trace time. Must round identically."""
+    import numpy as np
+
+    ppb = np.asarray(modes.PAGES_PER_BLOCK)
+    ratio = ppb.astype(np.float32) / np.float32(ppb[modes.QLC])
+    return np.maximum((ratio * cfg.slots_per_block).astype(np.int32), 1)

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import modes
@@ -40,6 +41,14 @@ class SSDState(NamedTuple):
     open_user: jnp.ndarray  # (n_luns,) int32 open block per LUN (-1 none)
     open_mig: jnp.ndarray  # (3,) int32 open migration block per mode (-1)
 
+    # free-pool bookkeeping (maintained incrementally by erase/alloc so the
+    # hot path never rescans block_state; invariant checked by the tests:
+    # free_count == (block_state == FREE).sum())
+    free_count: jnp.ndarray  # int32 scalar — exact number of FREE blocks
+    free_hint: jnp.ndarray  # (n_luns,) int32 — a (possibly stale) free block
+    #   per LUN, refreshed on erase; consumers verify against block_state and
+    #   fall back to a full scan only when the hint is dead
+
     # timing
     clock_ms: jnp.ndarray  # f32 scalar — simulated time
     lun_busy_ms: jnp.ndarray  # (n_luns,) f32 — cumulative busy time
@@ -47,6 +56,7 @@ class SSDState(NamedTuple):
 
     # telemetry
     lat_hist: jnp.ndarray  # (telemetry.N_LAT_BINS,) f32 read-latency histogram
+    w_lat_hist: jnp.ndarray  # (telemetry.N_LAT_BINS,) f32 write-latency histogram
 
     # counters (f32 scalars; summed per-chunk so precision is fine)
     svc_sum_ms: jnp.ndarray  # total user-read service time (latency + xfer)
@@ -85,6 +95,13 @@ def init_state(cfg: geometry.SimConfig, initial_pe=None) -> SSDState:
     block_next = jnp.where(used_full, spb, jnp.where(part, rem, 0)).astype(jnp.int32)
     block_valid = block_next
 
+    free = block_state == FREE
+    # lowest-numbered free block per LUN seeds the allocation hints
+    hint = jax.ops.segment_min(
+        jnp.where(free, blk, B), blk % cfg.n_luns, num_segments=cfg.n_luns
+    )
+    free_hint = jnp.where(hint < B, hint, -1).astype(jnp.int32)
+
     return SSDState(
         l2p=l2p,
         p2l=p2l,
@@ -99,7 +116,10 @@ def init_state(cfg: geometry.SimConfig, initial_pe=None) -> SSDState:
         heat=jnp.zeros((L,), jnp.float32),
         open_user=jnp.full((cfg.n_luns,), -1, jnp.int32),
         open_mig=jnp.full((3,), -1, jnp.int32),
+        free_count=free.sum().astype(jnp.int32),
+        free_hint=free_hint,
         lat_hist=jnp.zeros((telemetry.N_LAT_BINS,), jnp.float32),
+        w_lat_hist=jnp.zeros((telemetry.N_LAT_BINS,), jnp.float32),
         clock_ms=jnp.float32(0.0),
         lun_busy_ms=jnp.zeros((cfg.n_luns,), jnp.float32),
         chan_busy_ms=jnp.zeros((cfg.n_channels,), jnp.float32),

@@ -36,6 +36,10 @@ def _invariants(s, cfg):
     nonfree = np.array(s.block_state) != st.FREE
     assert (bn[nonfree] <= ppb[bm[nonfree]]).all()
     assert (bn >= bv).all()  # valid pages never exceed programmed pages
+    # incremental free-pool bookkeeping stays exact
+    assert int(s.free_count) == int((np.array(s.block_state) == st.FREE).sum())
+    hint = np.array(s.free_hint)
+    assert ((hint >= -1) & (hint < cfg.n_blocks)).all()
 
 
 class TestInit:
@@ -129,6 +133,27 @@ class TestEngine:
         assert float(s.n_writes) > 0
         assert (np.array(s.l2p) >= 0).all()
 
+    def test_write_latency_histogram(self):
+        cfg = geometry.tiny_config(policy=geometry.RARO, initial_pe=166)
+        tr = workload.mixed_trace(cfg, 3_000, 1.2, read_frac=0.6, seed=2)
+        s, ys = engine.run(cfg, tr)
+        # every successful write lands in exactly one histogram bin, and the
+        # per-chunk histograms stack to the cumulative one
+        assert float(s.w_lat_hist.sum()) == float(s.n_writes)
+        np.testing.assert_allclose(
+            np.asarray(ys.w_lat_hist).sum(0), np.asarray(s.w_lat_hist), rtol=1e-6
+        )
+        m = engine.summarize(s, cfg)
+        assert m["write_lat_p50_us"] > 0
+        assert m["write_lat_p99_us"] >= m["write_lat_p50_us"]
+
+    def test_read_only_run_records_no_writes(self):
+        cfg = geometry.tiny_config(policy=geometry.RARO, initial_pe=166)
+        tr = workload.zipf_read_trace(cfg, 2_000, 1.2, seed=3)
+        s, _ = engine.run(cfg, tr)
+        assert float(s.w_lat_hist.sum()) == 0.0
+        assert engine.summarize(s, cfg)["write_lat_p50_us"] == 0.0
+
     def test_single_thread_summary(self, raro_run):
         cfg, s, _ = raro_run
         m1 = engine.summarize(s, cfg, threads=1)
@@ -182,6 +207,52 @@ class TestFTL:
         _invariants(s2, cfg)
         assert int(ftl.free_block_count(s2)) >= free0 + 1
         assert float(s2.n_erases) == 2.0
+
+    def test_gc_never_fires_above_free_threshold(self):
+        """Regression (ISSUE 2): with a healthy free pool GC must be an
+        explicit no-op even when mostly-invalid victim blocks exist."""
+        cfg = geometry.tiny_config(gc_free_threshold=2)  # pool starts at 40
+        s = st.init_state(cfg)
+        spb = cfg.slots_per_block
+        kill = jnp.arange(0, spb - 16).astype(jnp.int32)  # block 0 mostly invalid
+        s = s._replace(
+            p2l=s.p2l.at[kill].set(-1),
+            l2p=s.l2p.at[kill].set(-1),
+            block_valid=s.block_valid.at[0].add(-(spb - 16)),
+        )
+        assert int(ftl.free_block_count(s)) >= cfg.gc_free_threshold
+        s2 = ftl.gc_step(s, cfg)
+        assert float(s2.n_erases) == 0.0
+        for name, a, b in zip(s._fields, s, s2):
+            assert (np.asarray(a) == np.asarray(b)).all(), name
+
+    def test_fused_reclaim_matches_block_migration_counters(self):
+        """The fused demotion pass migrates + erases each victim exactly once
+        and keeps the state invariants."""
+        cfg = geometry.tiny_config()
+        s = st.init_state(cfg)
+        # convert blocks 0 and 1 to TLC-full demotion candidates
+        s = ftl.migrate_block(s, jnp.int32(0), jnp.int32(modes.TLC), cfg)
+        s = ftl.migrate_block(s, jnp.int32(1), jnp.int32(modes.TLC), cfg)
+        tlc_full = (np.array(s.block_mode) == modes.TLC) & (
+            np.array(s.block_state) == st.FULL
+        )
+        assert tlc_full.any()
+        victims = jnp.asarray(np.nonzero(tlc_full)[0][:2], jnp.int32)
+        K = victims.shape[0]
+        conv0 = float(s.n_conversions[modes.TLC, modes.QLC])
+        erases0 = float(s.n_erases)
+        s2 = ftl.reclaim_victims(
+            s,
+            victims,
+            jnp.ones((K,), bool),
+            jnp.full((K,), modes.QLC, jnp.int32),
+            cfg,
+        )
+        _invariants(s2, cfg)
+        assert float(s2.n_conversions[modes.TLC, modes.QLC]) == conv0 + K
+        assert float(s2.n_erases) == erases0 + K
+        assert (np.array(s2.block_state)[np.array(victims)] == st.FREE).all()
 
 
 @settings(max_examples=10, deadline=None)

@@ -1,0 +1,141 @@
+"""Equivalence tests: the vectorized write path vs. the retained scan
+reference (DESIGN.md §2A).
+
+``engine.write_path_batched`` must produce state equivalent to
+``engine.write_path_reference`` on arbitrary mixed traces — including
+duplicate LPNs within a chunk, open-block rollover mid-chunk, and
+allocation failure when the free pool exhausts. Integer/mapping state must
+match exactly; float accumulators (busy time) may differ by summation
+order only.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hyp_fallback import given, settings
+from hyp_fallback import st as st_h
+
+from repro.ssdsim import engine, geometry, state as st, workload
+
+TINY = geometry.tiny_config()
+
+
+def assert_state_equivalent(s_ref: st.SSDState, s_bat: st.SSDState, tag=""):
+    for name, a, b in zip(s_ref._fields, s_ref, s_bat):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.dtype.kind == "f":
+            np.testing.assert_allclose(
+                a, b, rtol=1e-5, atol=1e-5, err_msg=f"{tag}: float field {name}"
+            )
+        else:
+            bad = np.nonzero(np.atleast_1d(a != b))[0]
+            assert (a == b).all(), (
+                f"{tag}: field {name} differs at {bad[:8]}: "
+                f"ref={np.atleast_1d(a)[bad][:8]} bat={np.atleast_1d(b)[bad][:8]}"
+            )
+
+
+def _run_both(s0, lpns, is_write, cfg):
+    s_ref = engine.write_path_reference(s0, lpns, is_write, cfg)
+    s_bat = engine.write_path_batched(s0, lpns, is_write, cfg)
+    return s_ref, s_bat
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st_h.integers(0, 2**16),
+    theta=st_h.floats(0.6, 1.5),
+    read_frac=st_h.floats(0.0, 0.9),
+)
+def test_property_write_paths_equivalent(seed, theta, read_frac):
+    """Random mixed traces, chunk by chunk, comparing full state each step.
+
+    Zipf LPNs give duplicate writes within a chunk; chunk (128) > QLC pages
+    per block (64) makes open-block rollover routine.
+    """
+    cfg = TINY
+    tr = workload.mixed_trace(cfg, 3 * cfg.chunk, theta, read_frac=read_frac, seed=seed)
+    s_ref = s_bat = st.init_state(cfg)
+    for i in range(tr["lpn"].shape[0]):
+        lp = jnp.asarray(tr["lpn"][i])
+        w = jnp.asarray(tr["op"][i]) == engine.OP_WRITE
+        s_ref = engine.write_path_reference(s_ref, lp, w, cfg)
+        s_bat = engine.write_path_batched(s_bat, lp, w, cfg)
+        assert_state_equivalent(s_ref, s_bat, tag=f"chunk {i}")
+
+
+def test_single_lun_rollover_equivalent():
+    """All writes on one LUN: the chunk spans two fresh blocks (128 > 64)."""
+    cfg = TINY
+    s0 = st.init_state(cfg)
+    lp = jnp.asarray((np.arange(cfg.chunk) * cfg.n_luns) % cfg.n_logical, jnp.int32)
+    w = jnp.ones(cfg.chunk, bool)
+    s_ref, s_bat = _run_both(s0, lp, w, cfg)
+    assert_state_equivalent(s_ref, s_bat, "rollover")
+    assert float(s_bat.n_writes) == cfg.chunk
+
+
+def test_duplicate_lpns_equivalent():
+    """A handful of LPNs overwritten many times in one chunk: only the last
+    write of each maps; earlier ones consume slots and are invalidated."""
+    cfg = TINY
+    s0 = st.init_state(cfg)
+    lp = jnp.asarray(np.tile([0, 1, 4, 5], cfg.chunk // 4), jnp.int32)
+    w = jnp.ones(cfg.chunk, bool)
+    s_ref, s_bat = _run_both(s0, lp, w, cfg)
+    assert_state_equivalent(s_ref, s_bat, "dups")
+    l2p = np.asarray(s_bat.l2p)
+    p2l = np.asarray(s_bat.p2l)
+    for lpn in (0, 1, 4, 5):
+        assert p2l[l2p[lpn]] == lpn
+
+
+def test_allocation_failure_mid_chunk_equivalent():
+    """Exactly one free block left: one rollover succeeds, the next fails,
+    and every later write on that LUN fails identically in both paths."""
+    base = geometry.tiny_config()
+    cfg = geometry.tiny_config(
+        n_logical=base.n_blocks * base.slots_per_block - base.slots_per_block - 32
+    )
+    s0 = st.init_state(cfg)
+    assert int(s0.free_count) == 1
+    free_blk = int(np.nonzero(np.asarray(s0.block_state) == st.FREE)[0][0])
+    lun = free_blk % cfg.n_luns
+    # every write targets the free block's LUN so the single spare is consumed
+    # mid-chunk and the remaining writes hit allocation failure
+    lp = jnp.asarray(
+        (lun + np.arange(cfg.chunk) * cfg.n_luns) % cfg.n_logical, jnp.int32
+    )
+    w = jnp.ones(cfg.chunk, bool)
+    s_ref, s_bat = _run_both(s0, lp, w, cfg)
+    assert_state_equivalent(s_ref, s_bat, "alloc-failure")
+    assert 0 < float(s_bat.n_writes) < cfg.chunk  # partial progress, then fail
+    assert int(s_bat.free_count) == 0
+    assert int(s_bat.open_user[lun]) == -1
+
+
+def test_device_full_no_writes_equivalent():
+    """Zero free blocks and no open block: every write fails, state (other
+    than the open_user reset) is untouched."""
+    base = geometry.tiny_config()
+    cfg = geometry.tiny_config(n_logical=base.n_blocks * base.slots_per_block - 32)
+    s0 = st.init_state(cfg)
+    assert int(s0.free_count) == 0
+    lp = jnp.asarray(np.arange(cfg.chunk, dtype=np.int32) % cfg.n_logical)
+    w = jnp.ones(cfg.chunk, bool)
+    s_ref, s_bat = _run_both(s0, lp, w, cfg)
+    assert_state_equivalent(s_ref, s_bat, "device-full")
+    assert float(s_bat.n_writes) == 0.0
+    np.testing.assert_array_equal(np.asarray(s_bat.l2p), np.asarray(s0.l2p))
+
+
+def test_reads_never_touch_write_path_state():
+    """A pure-read mask is a no-op for both implementations."""
+    cfg = TINY
+    s0 = st.init_state(cfg)
+    lp = jnp.asarray(np.arange(cfg.chunk, dtype=np.int32))
+    w = jnp.zeros(cfg.chunk, bool)
+    s_ref, s_bat = _run_both(s0, lp, w, cfg)
+    assert_state_equivalent(s_ref, s_bat, "no-writes")
+    assert float(s_bat.n_writes) == 0.0
+    assert float(s_bat.w_lat_hist.sum()) == 0.0
