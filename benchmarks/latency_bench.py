@@ -1,0 +1,140 @@
+"""Latency-under-load benchmark (DESIGN.md §2C): read-latency hockey-stick
+curves from the open-loop arrival engine.
+
+A retry-heavy read-disturb trace is replayed open-loop at a Poisson base
+rate calibrated to the device's measured closed-loop throughput, then swept
+over offered-load multipliers (``RunKnobs.arrival_scale``) so every load
+point of a policy's curve runs in one compiled batch. The emitted
+``BENCH_latency.json`` carries, per policy and load point, offered IOPS,
+achieved IOPS, mean/p50/p99/p999 read latency and mean queueing delay —
+plus the closed-loop reference run, whose p99 the open-loop tail must
+exceed at high offered load (the queueing the closed-loop engine cannot
+see).
+
+  PYTHONPATH=src python -m benchmarks.latency_bench [--smoke] [--out DIR]
+      [--requests N] [--scales 0.25,0.5,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+DEFAULT_SCALES = (0.25, 0.5, 0.8, 1.0, 1.5, 2.5, 4.0)
+SMOKE_SCALES = (0.25, 1.0, 4.0)
+
+_METRICS = (
+    ("offered_iops", "IOPS"),
+    ("iops", "IOPS"),
+    ("mean_read_latency_us", "us"),
+    ("read_lat_p50_us", "us"),
+    ("read_lat_p99_us", "us"),
+    ("read_lat_p999_us", "us"),
+    ("read_queue_delay_us", "us"),
+)
+
+
+def bench_latency(cfg, n_requests: int, scales, threads: int = 4):
+    """Run closed-loop references + the open-loop load sweep.
+
+    Returns (rows, curves, base_rate_iops): harness-style (name, value,
+    unit) rows, a per-policy dict of aligned metric lists for plotting, and
+    the calibrated base Poisson arrival rate.
+    """
+    from repro.experiments import registry, sweep
+    from repro.ssdsim import engine, geometry
+
+    # closed-loop reference per policy; baseline throughput calibrates the
+    # base arrival rate so scale 1.0 sits near the knee of the curve
+    trace = registry.build("read_disturb_hammer", cfg, n_requests, seed=0)
+    rows, closed = [], {}
+    for pol in (geometry.BASELINE, geometry.RARO):
+        pcfg = cfg.with_policy(pol)
+        s, _ = engine.run(pcfg, trace)
+        m = engine.summarize(s, pcfg, threads=threads)
+        closed[pol] = m
+        pname = geometry.POLICY_NAMES[pol]
+        for k, u in _METRICS[1:]:
+            rows.append((f"latency/{pname}/closed/{k}", float(m[k]), u))
+    base_rate = max(closed[geometry.BASELINE]["iops"], 1.0)
+
+    spec = sweep.SweepSpec(
+        scenario="hammer_openloop",
+        n_requests=n_requests,
+        policies=(geometry.BASELINE, geometry.RARO),
+        initial_pe=(cfg.initial_pe,),
+        seeds=(0,),
+        arrival_scale=tuple(scales),
+        scenario_kw=(("rate_iops", base_rate),),
+        base=cfg,
+    )
+    results = sweep.run_sweep(spec, threads=threads)
+
+    curves = {}
+    for res in results:
+        run = res["run"]
+        pname, scale = run["policy"], run["arrival_scale"]
+        res["offered_iops"] = base_rate * scale
+        c = curves.setdefault(pname, {k: [] for k, _ in _METRICS})
+        c.setdefault("arrival_scale", []).append(scale)
+        for k, u in _METRICS:
+            c[k].append(float(res[k]))
+            rows.append((f"latency/{pname}/load{scale:g}/{k}", float(res[k]), u))
+    for pol, m in closed.items():
+        curves[geometry.POLICY_NAMES[pol]]["closed_p99_us"] = float(
+            m["read_lat_p99_us"]
+        )
+    return rows, curves, base_rate
+
+
+def main() -> None:
+    from benchmarks.engine_bench import bench_config
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny geometry + 3 load points (CI)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--scales", default=None,
+                    help="comma-separated offered-load multipliers")
+    ap.add_argument("--out", default=".", metavar="DIR",
+                    help="directory for the BENCH_latency.json artifact")
+    args = ap.parse_args()
+
+    cfg = bench_config(args.smoke)
+    n_requests = args.requests or (4 * cfg.chunk if args.smoke else 40 * cfg.chunk)
+    scales = (
+        tuple(float(x) for x in args.scales.split(","))
+        if args.scales else (SMOKE_SCALES if args.smoke else DEFAULT_SCALES)
+    )
+
+    rows, curves, base_rate = bench_latency(cfg, n_requests, scales)
+    print("name,value,unit")
+    for n, v, u in rows:
+        print(f"{n},{v:.4f},{u}", flush=True)
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    doc = {
+        "bench": "latency",
+        "config": {
+            "smoke": args.smoke,
+            "n_blocks": cfg.n_blocks,
+            "slots_per_block": cfg.slots_per_block,
+            "n_logical": cfg.n_logical,
+            "chunk": cfg.chunk,
+            "initial_pe": cfg.initial_pe,
+            "n_requests": n_requests,
+            "base_rate_iops": base_rate,
+            "arrival_scales": list(scales),
+        },
+        "curves": curves,
+        "rows": [list(r) for r in rows],
+    }
+    p = out / "BENCH_latency.json"
+    p.write_text(json.dumps(doc, indent=1, sort_keys=True))
+    print(f"# wrote {p}")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,3 +25,26 @@ def tail_latency_sweep(scenario: str = "read_disturb_hammer",
         seeds=tuple(seeds),
         base=SimConfig(device_age_h=24.0),
     )
+
+
+def latency_load_sweep(scenario: str = "hammer_openloop",
+                       n_requests: int = 80_000,
+                       rate_iops: float = 50_000.0,
+                       arrival_scale=(0.25, 0.5, 1.0, 2.0, 4.0),
+                       stage: str = "old", seeds=(0,)):
+    """Latency-vs-offered-load experiment grid: one open-loop retry-heavy
+    trace at a base Poisson ``rate_iops``, swept over offered-load
+    multipliers through the traced ``RunKnobs.arrival_scale`` knob, so the
+    whole hockey-stick curve (per policy) runs as one compiled batch."""
+    from repro.experiments.sweep import SweepSpec
+
+    return SweepSpec(
+        scenario=scenario,
+        n_requests=n_requests,
+        policies=(BASELINE, RARO),
+        initial_pe=(STAGE_PE[stage],),
+        seeds=tuple(seeds),
+        arrival_scale=tuple(arrival_scale),
+        scenario_kw=(("rate_iops", rate_iops),),
+        base=SimConfig(device_age_h=24.0),
+    )

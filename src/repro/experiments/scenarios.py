@@ -132,6 +132,35 @@ def write_burst_then_read(cfg: geometry.SimConfig, n_requests: int, seed: int = 
     return workload._pack(cfg, lpn, op)
 
 
+@register("zipf_openloop")
+def zipf_openloop(cfg: geometry.SimConfig, n_requests: int, seed: int = 0,
+                  theta: float = 1.2, rate_iops: float = 50_000.0,
+                  arrival_dist: str = "poisson"):
+    """Zipf reads with open-loop Poisson (or constant-rate) arrivals at
+    ``rate_iops``. The base scenario for latency-vs-offered-load curves:
+    sweep the offered load via ``RunKnobs.arrival_scale`` (a traced rate
+    multiplier) so every load point batches through one compiled run."""
+    tr = workload.zipf_read_trace(cfg, n_requests, theta, seed=seed)
+    return workload.attach_arrivals(cfg, tr, rate_iops, dist=arrival_dist,
+                                    seed=seed + 1)
+
+
+@register("hammer_openloop")
+def hammer_openloop(cfg: geometry.SimConfig, n_requests: int, seed: int = 0,
+                    hammer_pages: int | None = None, hammer_prob: float = 0.8,
+                    rate_iops: float = 50_000.0,
+                    arrival_dist: str = "poisson"):
+    """Read-disturb hammer with open-loop arrivals — the paper's tail-latency
+    story under real queueing: disturb-driven retries inflate service times,
+    which inflate queueing delay on the hammered LUNs, which is exactly the
+    effect the closed-loop engine cannot show."""
+    tr = read_disturb_hammer(cfg, n_requests, seed=seed,
+                             hammer_pages=hammer_pages,
+                             hammer_prob=hammer_prob)
+    return workload.attach_arrivals(cfg, tr, rate_iops, dist=arrival_dist,
+                                    seed=seed + 1)
+
+
 @register("read_disturb_hammer")
 def read_disturb_hammer(cfg: geometry.SimConfig, n_requests: int, seed: int = 0,
                         hammer_pages: int | None = None,

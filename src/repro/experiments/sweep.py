@@ -45,6 +45,11 @@ class SweepSpec:
     seeds: tuple[int, ...] = (0, 1)
     r1: tuple[int, ...] = (1,)
     r2_override: tuple[int, ...] = (-1,)
+    # offered-load multipliers for open-loop scenarios (traces carrying
+    # arrival_ms): effective arrival time = trace arrival / scale, so the
+    # whole latency-vs-load curve batches through one compiled program.
+    # Ignored (with a warning) for closed-loop scenarios.
+    arrival_scale: tuple[float, ...] = (1.0,)
     # forwarded to the scenario builder (e.g. {"theta": 1.2}); tuple-of-items
     # so the spec stays hashable
     scenario_kw: tuple[tuple[str, object], ...] = ()
@@ -52,7 +57,8 @@ class SweepSpec:
 
     def n_runs(self) -> int:
         return (len(self.policies) * len(self.initial_pe) * len(self.seeds)
-                * len(self.r1) * len(self.r2_override))
+                * len(self.r1) * len(self.r2_override)
+                * len(self.arrival_scale))
 
 
 @dataclass(frozen=True)
@@ -65,6 +71,7 @@ class RunSpec:
     seed: int
     r1: int
     r2_override: int
+    arrival_scale: float = 1.0
 
     def tag(self) -> str:
         parts = [
@@ -77,37 +84,44 @@ class RunSpec:
             parts.append(f"r1_{self.r1}")
         if self.r2_override >= 0:
             parts.append(f"r2_{self.r2_override}")
+        if self.arrival_scale != 1.0:
+            parts.append(f"load{self.arrival_scale:g}")
         return "_".join(parts)
 
 
 def expand(spec: SweepSpec) -> list[RunSpec]:
     return [
-        RunSpec(spec.scenario, pol, pe, seed, r1, r2)
-        for pol, pe, seed, r1, r2 in itertools.product(
-            spec.policies, spec.initial_pe, spec.seeds, spec.r1, spec.r2_override
+        RunSpec(spec.scenario, pol, pe, seed, r1, r2, scale)
+        for pol, pe, seed, r1, r2, scale in itertools.product(
+            spec.policies, spec.initial_pe, spec.seeds, spec.r1,
+            spec.r2_override, spec.arrival_scale
         )
     ]
 
 
 @partial(jax.jit, static_argnums=(0, 3))
 def _sweep_jit(cfg: geometry.SimConfig, lpns, ops, has_writes: bool,
-               knobs: policies.RunKnobs):
+               knobs: policies.RunKnobs, arrival_ms=None):
     """Run a stacked batch of traces; everything dynamic rides the vmap axis.
 
-    ``lpns``/``ops``: (R, n_chunks, chunk); ``knobs``: (R,) int32 fields.
-    Returns the stacked final state pytree (leading run axis on every leaf).
+    ``lpns``/``ops``: (R, n_chunks, chunk); ``knobs``: (R,) fields;
+    ``arrival_ms``: (R, n_chunks, chunk) f32 or None (closed loop). Returns
+    the stacked final state pytree (leading run axis on every leaf).
     """
 
-    def one(lpns_i, ops_i, knobs_i):
+    def one(lpns_i, ops_i, knobs_i, arr_i=None):
         s0 = st.init_state(cfg, initial_pe=knobs_i.initial_pe)
 
         def body(s, x):
             return engine.step_chunk(s, x, cfg, has_writes, knobs_i)
 
-        s, _ = lax.scan(body, s0, (lpns_i, ops_i))
+        xs = (lpns_i, ops_i) if arr_i is None else (lpns_i, ops_i, arr_i)
+        s, _ = lax.scan(body, s0, xs)
         return s
 
-    return jax.vmap(one)(lpns, ops, knobs)
+    if arrival_ms is None:
+        return jax.vmap(one)(lpns, ops, knobs)
+    return jax.vmap(one)(lpns, ops, knobs, arrival_ms)
 
 
 def _take_run(stacked, i: int):
@@ -136,6 +150,14 @@ def run_sweep(spec: SweepSpec, threads: int = 4, verbose: bool = False):
             spec.scenario, spec.base, spec.n_requests, seed=seed, **kw
         )
     has_writes = bool(any((t["op"] == engine.OP_WRITE).any() for t in traces.values()))
+    open_loop = all("arrival_ms" in t for t in traces.values())
+    if spec.arrival_scale != (1.0,) and not open_loop:
+        warnings.warn(
+            f"scenario {spec.scenario!r} has no arrival timestamps; the "
+            f"arrival_scale axis {spec.arrival_scale} has no effect on "
+            "closed-loop runs",
+            stacklevel=2,
+        )
 
     results = []
     for pol in spec.policies:  # static axis -> one compile each
@@ -143,15 +165,24 @@ def run_sweep(spec: SweepSpec, threads: int = 4, verbose: bool = False):
         cfg = replace(spec.base, policy=pol)
         lpns = jnp.stack([jnp.asarray(traces[r.seed]["lpn"], jnp.int32) for r in group])
         ops = jnp.stack([jnp.asarray(traces[r.seed]["op"], jnp.int32) for r in group])
+        arr = (
+            jnp.stack([jnp.asarray(traces[r.seed]["arrival_ms"], jnp.float32)
+                       for r in group])
+            if open_loop else None
+        )
         knobs = policies.RunKnobs(
             r1=jnp.asarray([r.r1 for r in group], jnp.int32),
             r2_override=jnp.asarray([r.r2_override for r in group], jnp.int32),
             initial_pe=jnp.asarray([r.initial_pe for r in group], jnp.int32),
+            arrival_scale=(
+                jnp.asarray([r.arrival_scale for r in group], jnp.float32)
+                if open_loop else None
+            ),
         )
         if verbose:
             print(f"# sweep group policy={geometry.POLICY_NAMES[pol]}: "
                   f"{len(group)} runs in one jit", flush=True)
-        states = _sweep_jit(cfg, lpns, ops, has_writes, knobs)
+        states = _sweep_jit(cfg, lpns, ops, has_writes, knobs, arr)
         for i, r in enumerate(group):
             m = engine.summarize(_take_run(states, i), cfg, threads=threads)
             m["run"] = dict(
@@ -161,6 +192,7 @@ def run_sweep(spec: SweepSpec, threads: int = 4, verbose: bool = False):
                 seed=r.seed,
                 r1=r.r1,
                 r2_override=r.r2_override,
+                arrival_scale=r.arrival_scale,
                 n_requests=spec.n_requests,
                 tag=r.tag(),
             )
@@ -181,6 +213,7 @@ _ROW_UNITS = {
     "write_lat_p95_us": "us",
     "write_lat_p99_us": "us",
     "write_lat_p999_us": "us",
+    "read_queue_delay_us": "us",
     "retries_per_read": "retries",
     "capacity_gib": "GiB",
     "capacity_loss_gib": "GiB",

@@ -74,13 +74,15 @@ def parse_msr_csv(path) -> dict[str, np.ndarray]:
 
 
 def records_to_page_requests(cfg: geometry.SimConfig, rec: dict[str, np.ndarray]):
-    """Expand byte-granular I/Os into per-page (lpn, op) request streams.
+    """Expand byte-granular I/Os into per-page (lpn, op, arrival_ms) streams.
 
     Each I/O touches ``ceil(size / page_bytes)`` consecutive pages starting
-    at ``offset // page_bytes``. The trace's page-address range is shifted to
-    start at 0 and wrapped modulo ``n_logical``: relative locality (and thus
+    at ``offset // page_bytes``; every page of an I/O inherits the I/O's
+    arrival time. The trace's page-address range is shifted to start at 0
+    and wrapped modulo ``n_logical``: relative locality (and thus
     block-level read-disturb concentration) survives the remap even when the
-    traced volume is far larger than the simulated device.
+    traced volume is far larger than the simulated device. Arrival times are
+    Windows-filetime ticks (100 ns) rebased to ms from the first record.
     """
     pb = cfg.page_bytes
     first = rec["offset"] // pb
@@ -94,28 +96,42 @@ def records_to_page_requests(cfg: geometry.SimConfig, rec: dict[str, np.ndarray]
     idx -= np.repeat(cum - n_pages, n_pages)
     lpn = (lpn + idx) % cfg.n_logical
     op = np.repeat(rec["op"], n_pages)
-    return lpn.astype(np.int32), op.astype(np.int32)
+    ts = rec["timestamp"]
+    arrival_ms = np.repeat((ts - ts.min()) / 1e4, n_pages).astype(np.float64)
+    return lpn.astype(np.int32), op.astype(np.int32), arrival_ms
 
 
-def replay_trace(cfg: geometry.SimConfig, path, n_requests: int | None = None):
+def replay_trace(cfg: geometry.SimConfig, path, n_requests: int | None = None,
+                 arrivals: bool = True, time_scale: float = 1.0):
     """Full pipeline: CSV -> page requests -> packed engine trace.
 
     ``n_requests`` truncates (or cycles, if the trace is shorter) the
-    request stream so sweep groups can share one static trace shape.
+    request stream so sweep groups can share one static trace shape; cycled
+    repetitions are shifted by the trace duration so arrival times stay
+    nondecreasing. ``arrivals=False`` drops the timestamp column and replays
+    the trace closed-loop (the pre-arrival-model behavior);
+    ``time_scale > 1`` compresses the recorded timeline, raising the offered
+    load (the sweep runner's ``arrival_scale`` knob does the same per run
+    without rebuilding the trace).
     """
-    lpn, op = records_to_page_requests(cfg, parse_msr_csv(path))
+    lpn, op, arr = records_to_page_requests(cfg, parse_msr_csv(path))
     if n_requests is not None:
         if len(lpn) < n_requests:  # cycle the trace to fill the budget
             reps = -(-n_requests // len(lpn))
+            span = arr[-1] + (arr[-1] - arr[0]) / max(len(arr) - 1, 1)
+            arr = np.concatenate([arr + r * span for r in range(reps)])
             lpn = np.tile(lpn, reps)
             op = np.tile(op, reps)
-        lpn, op = lpn[:n_requests], op[:n_requests]
-    return workload._pack(cfg, lpn, op)
+        lpn, op, arr = lpn[:n_requests], op[:n_requests], arr[:n_requests]
+    return workload._pack(cfg, lpn, op, arr / time_scale if arrivals else None)
 
 
 @register("msr_sample", seed_invariant=True)
 def msr_sample(cfg: geometry.SimConfig, n_requests: int, seed: int = 0,
-               path=None):
+               path=None, arrivals: bool = True, time_scale: float = 1.0):
     """Replay of the bundled MSR-style sample trace (seed is unused; trace
-    replay is deterministic by construction)."""
-    return replay_trace(cfg, path or SAMPLE_TRACE, n_requests=n_requests)
+    replay is deterministic by construction). Replays open-loop against the
+    CSV's timestamp column by default; ``arrivals=False`` restores the
+    closed-loop replay."""
+    return replay_trace(cfg, path or SAMPLE_TRACE, n_requests=n_requests,
+                        arrivals=arrivals, time_scale=time_scale)

@@ -7,6 +7,19 @@ sequential scan survives only as the test reference), then the policy's
 per-read trigger pipeline runs on the chunk's unique read set and
 conversions/reclaim/GC execute as pressure-gated background FTL tasks,
 exactly like FEMU's background loop between request bursts.
+
+Two timing models share the engine (DESIGN.md §2C):
+
+  closed loop (trace without ``arrival_ms``) — requests are serviced
+  back-to-back; recorded read latency = sense/retry + transfer and the sim
+  clock follows cumulative LUN busy time. The original behavior, bit-for-bit.
+
+  open loop (trace with ``arrival_ms``) — each request has an arrival
+  timestamp; requests queue FCFS per LUN behind earlier requests and behind
+  background FTL work (migrations/reclaim/GC/erase), and the recorded
+  latency adds the queueing delay: latency = (departure - arrival) +
+  transfer, with departure from a vectorized per-LUN Lindley recursion
+  (:func:`_queue_departures`) against the ``lun_avail_ms`` clocks.
 """
 
 from __future__ import annotations
@@ -32,10 +45,41 @@ class ChunkMetrics(NamedTuple):
     mode_hist: jnp.ndarray  # (3,) blocks per mode (non-free)
     reads: jnp.ndarray
     retries: jnp.ndarray
-    svc_ms: jnp.ndarray  # total read service time this chunk
+    svc_ms: jnp.ndarray  # total recorded read latency this chunk
     migrated: jnp.ndarray
     lat_hist: jnp.ndarray  # (telemetry.N_LAT_BINS,) this chunk's read latencies
     w_lat_hist: jnp.ndarray  # (telemetry.N_LAT_BINS,) this chunk's write latencies
+    q_ms: jnp.ndarray  # total read queueing delay this chunk (0 closed-loop)
+
+
+def _queue_departures(avail0_ms, arrival_ms, occ_ms, lun, active, n_luns: int):
+    """Per-LUN FCFS departure times for one chunk (vectorized Lindley).
+
+    The classic recursion per LUN, in request order,
+
+        start_k = max(A_k, D_{k-1});  D_k = start_k + S_k
+
+    closed-forms — with P_k the per-LUN inclusive prefix sum of service
+    times S and A_j the arrival times — to
+
+        D_k = P_k + max(avail0_lun, max_{j<=k}(A_j - P_{j-1}))
+
+    so one masked ``cumsum`` and one masked ``cummax`` per LUN column
+    replace a per-request scan. Inactive lanes neither occupy the LUN nor
+    constrain the max; a LUN with no requests this chunk keeps
+    ``avail0_lun``. Returns (per-lane departure times, final per-LUN
+    availability), both in ms.
+    """
+    oh = (lun[:, None] == jnp.arange(n_luns, dtype=jnp.int32)[None, :]) & active[:, None]
+    sv = jnp.where(oh, occ_ms[:, None], 0.0)
+    prefix = jnp.cumsum(sv, axis=0)  # (C, n_luns) inclusive per-LUN P_k
+    slack = jnp.where(oh, arrival_ms[:, None] - (prefix - sv), -jnp.inf)
+    m = jnp.maximum(lax.cummax(slack, axis=0), avail0_ms[None, :])
+    depart = prefix + m
+    lane_dep = jnp.take_along_axis(
+        depart, jnp.clip(lun, 0, n_luns - 1)[:, None], axis=1
+    )[:, 0]
+    return lane_dep, depart[-1]
 
 
 def lookup(s: st.SSDState, lpns, cfg: geometry.SimConfig):
@@ -125,7 +169,8 @@ def write_path_reference(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig
     return s
 
 
-def write_path_batched(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig):
+def write_path_batched(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig,
+                       w_lat_us=None):
     """Vectorized user-write path (DESIGN.md §2A).
 
     The chunk's writes are grouped by LUN and assigned destination slots with
@@ -135,6 +180,10 @@ def write_path_batched(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig):
     order so allocation decisions match :func:`write_path_reference` exactly.
     All L2P/P2L/timestamp/accounting updates are masked scatters — no
     per-request scan.
+
+    ``w_lat_us`` optionally overrides the per-lane latency recorded in the
+    write histogram (the open-loop engine passes queueing-inclusive sojourn
+    times); the default is the closed-loop QLC program + transfer constant.
     """
     spb = cfg.slots_per_block
     ppb_q = int(geometry.pages_per_block_host(cfg)[modes.QLC])
@@ -239,7 +288,10 @@ def write_path_batched(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig):
     )
 
     okc = jax.ops.segment_sum(oki, lun, num_segments=nL)
-    w_lat_us = modes.WRITE_LATENCY_US[modes.QLC] + cfg.transfer_us
+    if w_lat_us is None:
+        w_lat_us = jnp.full(
+            (C,), modes.WRITE_LATENCY_US[modes.QLC] + cfg.transfer_us, jnp.float32
+        )
     return s._replace(
         l2p=l2p,
         p2l=p2l,
@@ -251,18 +303,18 @@ def write_path_batched(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig):
         lun_busy_ms=s.lun_busy_ms
         + okc * (modes.WRITE_LATENCY_US[modes.QLC] / 1000.0),
         n_writes=s.n_writes + ok.sum().astype(jnp.float32),
-        w_lat_hist=telemetry.record(
-            s.w_lat_hist, jnp.full((C,), w_lat_us, jnp.float32), ok
-        ),
+        w_lat_hist=telemetry.record(s.w_lat_hist, w_lat_us, ok),
     )
 
 
 def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
                knobs: policies.RunKnobs | None = None):
-    """One engine step. ``knobs`` optionally supplies traced overrides for
-    the batchable policy/wear knobs (sweep runner); ``None`` reads them from
-    ``cfg`` as before."""
-    lpns, ops = req
+    """One engine step. ``req`` is ``(lpns, ops)`` for the closed-loop model
+    or ``(lpns, ops, arrival_ms)`` for the open-loop arrival model. ``knobs``
+    optionally supplies traced overrides for the batchable policy/wear knobs
+    (sweep runner); ``None`` reads them from ``cfg`` as before."""
+    lpns, ops = req[0], req[1]
+    arrival = req[2] if len(req) == 3 else None
     is_read = ops == OP_READ
 
     # ---------------- reads (vectorized) ----------------
@@ -273,14 +325,45 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
     lun = blk % cfg.n_luns
     chan = lun % cfg.n_channels
 
+    # ---------------- open-loop queueing (DESIGN.md §2C) ----------------
+    if arrival is not None:
+        scale = (
+            jnp.float32(1.0)
+            if knobs is None or knobs.arrival_scale is None
+            else knobs.arrival_scale.astype(jnp.float32)
+        )
+        t_arr = arrival / scale  # scale multiplies the offered rate
+        wv = (ops == OP_WRITE) & (lpns >= 0)
+        active = rd | wv
+        q_lun = jnp.where(rd, lun, jnp.maximum(lpns, 0) % cfg.n_luns).astype(jnp.int32)
+        # LUN occupancy: sense+retries for reads, page program for writes —
+        # the same terms the closed-loop model books into lun_busy_ms.
+        # Channel transfer is appended to the recorded latency but does not
+        # occupy the LUN (it overlaps the next sense, as on real hardware).
+        occ_us = jnp.where(rd, svc_us, modes.WRITE_LATENCY_US[modes.QLC])
+        dep_ms, lun_avail = _queue_departures(
+            s.lun_avail_ms, t_arr, jnp.where(active, occ_us, 0.0) / 1000.0,
+            q_lun, active, cfg.n_luns,
+        )
+        sojourn_us = (dep_ms - t_arr) * 1000.0 + cfg.transfer_us
+        queue_us = jnp.maximum(sojourn_us - occ_us - cfg.transfer_us, 0.0)
+        rec_lat_us = sojourn_us  # queue + sense/retry (or program) + xfer
+        chunk_q = jnp.where(rd, queue_us, 0.0).sum() / 1000.0
+        chunk_svc = jnp.where(rd, rec_lat_us, 0.0).sum() / 1000.0
+        chunk_hist = telemetry.record(
+            jnp.zeros((telemetry.N_LAT_BINS,), jnp.float32), rec_lat_us, rd
+        )
+    else:
+        chunk_q = jnp.float32(0.0)
+        chunk_svc = (svc_us + xfer_us).sum() / 1000.0
+        chunk_hist = telemetry.record(
+            jnp.zeros((telemetry.N_LAT_BINS,), jnp.float32), svc_us + xfer_us, rd
+        )
+
     lun_add = jax.ops.segment_sum(svc_us, lun, num_segments=cfg.n_luns) / 1000.0
     chan_add = jax.ops.segment_sum(xfer_us, chan, num_segments=cfg.n_channels) / 1000.0
     chunk_reads = rd.sum().astype(jnp.float32)
     chunk_retries = jnp.where(rd, retries, 0).sum().astype(jnp.float32)
-    chunk_svc = (svc_us + xfer_us).sum() / 1000.0
-    chunk_hist = telemetry.record(
-        jnp.zeros((telemetry.N_LAT_BINS,), jnp.float32), svc_us + xfer_us, rd
-    )
 
     s = s._replace(
         lun_busy_ms=s.lun_busy_ms + lun_add,
@@ -288,6 +371,7 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
         block_reads=s.block_reads
         + jax.ops.segment_sum(rd.astype(jnp.int32), blk, num_segments=cfg.n_blocks),
         svc_sum_ms=s.svc_sum_ms + chunk_svc,
+        q_sum_ms=s.q_sum_ms + chunk_q,
         n_reads=s.n_reads + chunk_reads,
         n_retries=s.n_retries + chunk_retries,
         lat_hist=s.lat_hist + chunk_hist,
@@ -302,14 +386,31 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
     # ---------------- user writes ----------------
     if has_writes:
         w_hist0 = s.w_lat_hist
-        s = write_path_batched(s, lpns, ops == OP_WRITE, cfg)
+        s = write_path_batched(
+            s, lpns, ops == OP_WRITE, cfg,
+            w_lat_us=rec_lat_us if arrival is not None else None,
+        )
         chunk_w_hist = s.w_lat_hist - w_hist0
     else:
         chunk_w_hist = jnp.zeros((telemetry.N_LAT_BINS,), jnp.float32)
 
+    # background FTL work from here on (migrations/reclaim/GC) extends the
+    # LUN availability clocks: the next chunk's arrivals queue behind it
+    busy_mark = s.lun_busy_ms
+
     # ---------------- policy: conversion migrations ----------------
     if cfg.policy != geometry.BASELINE:
-        uniq = jnp.unique(jnp.where(rd, lpns, -1), size=cfg.chunk, fill_value=-1)
+        # dedup of the chunk's read set: one int32 sort + adjacent-equal
+        # mask. Replaces jnp.unique(size=chunk) (~9x slower: it layers
+        # cumsum/scatter compaction on top of the same sort). Masked lanes
+        # sort to the top as n_logical and drop to -1; survivors stay in
+        # ascending LPN order, so heat ties in the top-k below break
+        # identically to the jnp.unique ordering. (A sort-free scatter-mark
+        # on an (L,)-sized scratch was measured slower: the per-chunk fill
+        # of the scratch dominates at real geometry.)
+        srt = jnp.sort(jnp.where(rd, lpns, cfg.n_logical))
+        dup = jnp.concatenate([jnp.zeros((1,), bool), srt[1:] == srt[:-1]])
+        uniq = jnp.where((srt >= cfg.n_logical) | dup, -1, srt)
         slot_u, blk_u, mode_u, retr_u, ok_u = lookup(s, uniq, cfg)
         heat_u = s.heat[jnp.maximum(uniq, 0)]
         sel = policies.select_migrations(
@@ -367,6 +468,17 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
     # clock follows the busiest LUN (device saturated under FIO load)
     s = s._replace(clock_ms=jnp.maximum(s.clock_ms, s.lun_busy_ms.max()))
 
+    if arrival is not None:
+        # block the next chunk's arrivals behind this chunk's background
+        # work, and let wall time follow real arrivals (idle gaps age pages)
+        lun_avail = lun_avail + (s.lun_busy_ms - busy_mark)
+        s = s._replace(
+            lun_avail_ms=lun_avail,
+            clock_ms=jnp.maximum(
+                s.clock_ms, jnp.maximum(t_arr[-1], lun_avail.max())
+            ),
+        )
+
     nonfree = s.block_state != st.FREE
     mode_hist = jax.ops.segment_sum(
         nonfree.astype(jnp.int32), s.block_mode, num_segments=3
@@ -381,6 +493,7 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
         migrated=s.n_migrated_pages,
         lat_hist=chunk_hist,
         w_lat_hist=chunk_w_hist,
+        q_ms=chunk_q,
     )
     return s, y
 
@@ -395,14 +508,30 @@ def _run_jit(cfg: geometry.SimConfig, lpns, ops, has_writes: bool):
     return lax.scan(body, s0, (lpns, ops))
 
 
+@partial(jax.jit, static_argnums=(0, 4))
+def _run_open_jit(cfg: geometry.SimConfig, lpns, ops, arrival_ms,
+                  has_writes: bool):
+    s0 = st.init_state(cfg)
+
+    def body(s, x):
+        return step_chunk(s, x, cfg, has_writes)
+
+    return lax.scan(body, s0, (lpns, ops, arrival_ms))
+
+
 def run(cfg: geometry.SimConfig, trace, has_writes: bool | None = None):
     """Run a full trace. ``trace`` is a dict with 'lpn' and 'op' arrays of
-    shape (n_chunks, cfg.chunk). Returns (final_state, ChunkMetrics stacked).
+    shape (n_chunks, cfg.chunk); an optional 'arrival_ms' array of the same
+    shape switches the engine to the open-loop arrival model. Returns
+    (final_state, ChunkMetrics stacked).
     """
     if has_writes is None:
         has_writes = bool((trace["op"] == OP_WRITE).any())
     lpns = jnp.asarray(trace["lpn"], jnp.int32)
     ops = jnp.asarray(trace["op"], jnp.int32)
+    if "arrival_ms" in trace:
+        arr = jnp.asarray(trace["arrival_ms"], jnp.float32)
+        return _run_open_jit(cfg, lpns, ops, arr, has_writes)
     return _run_jit(cfg, lpns, ops, has_writes)
 
 
@@ -411,7 +540,15 @@ def summarize(s: st.SSDState, cfg: geometry.SimConfig, threads: int = 4):
     import numpy as np
 
     n_reads = float(s.n_reads)
-    makespan_ms = float(jnp.maximum(s.lun_busy_ms.max(), s.chan_busy_ms.max()))
+    # under the open-loop model elapsed time is the last LUN-availability
+    # clock (includes idle gaps); closed-loop lun_avail_ms stays 0 so the
+    # busy-time makespan is unchanged
+    makespan_ms = float(
+        jnp.maximum(
+            jnp.maximum(s.lun_busy_ms.max(), s.chan_busy_ms.max()),
+            s.lun_avail_ms.max(),
+        )
+    )
     mean_lat_ms = float(s.svc_sum_ms) / max(n_reads, 1.0)
     if threads == 1:
         # synchronous single-thread: no inter-LUN overlap; background work
@@ -434,6 +571,7 @@ def summarize(s: st.SSDState, cfg: geometry.SimConfig, threads: int = 4):
         write_lat_p95_us=wpct[0.95],
         write_lat_p99_us=wpct[0.99],
         write_lat_p999_us=wpct[0.999],
+        read_queue_delay_us=float(s.q_sum_ms) / max(n_reads, 1.0) * 1000.0,
         retries_per_read=float(s.n_retries) / max(n_reads, 1.0),
         capacity_gib=cap,
         capacity_loss_gib=init_cap - cap,

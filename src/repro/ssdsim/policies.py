@@ -22,17 +22,22 @@ from repro.ssdsim import geometry
 
 
 class RunKnobs(NamedTuple):
-    """Batchable per-run knobs (int32 scalars, may be traced/vmapped).
+    """Batchable per-run knobs (scalars, may be traced/vmapped).
 
     These are the SimConfig fields the sweep runner batches through
     ``jax.vmap``: unlike ``policy`` or the geometry they never change trace
-    shapes, so a whole grid of (r1, r2_override, initial_pe) runs shares one
-    compiled program (DESIGN.md §7.3).
+    shapes, so a whole grid of (r1, r2_override, initial_pe, arrival_scale)
+    runs shares one compiled program (DESIGN.md §7.3).
     """
 
     r1: jnp.ndarray
     r2_override: jnp.ndarray  # < 0: use the paper's stage schedule
     initial_pe: jnp.ndarray
+    # offered-load multiplier for open-loop traces: effective arrival time
+    # = trace arrival_ms / arrival_scale, so scale 2.0 doubles the offered
+    # IOPS of the same trace. None (not a pytree leaf) or 1.0 replays the
+    # trace's own timeline; ignored entirely for closed-loop traces.
+    arrival_scale: jnp.ndarray | None = None
 
 
 def thresholds_for(cfg: geometry.SimConfig, pe_cycles, knobs: RunKnobs | None = None):

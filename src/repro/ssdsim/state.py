@@ -53,13 +53,20 @@ class SSDState(NamedTuple):
     clock_ms: jnp.ndarray  # f32 scalar — simulated time
     lun_busy_ms: jnp.ndarray  # (n_luns,) f32 — cumulative busy time
     chan_busy_ms: jnp.ndarray  # (n_channels,) f32
+    # open-loop arrival model (DESIGN.md §2C): absolute sim time at which
+    # each LUN next becomes available. Requests arriving earlier queue
+    # (FCFS per LUN); background work (migrations/GC/erase) pushes it
+    # forward too, so reads block behind FTL tasks. Stays 0 in closed loop.
+    lun_avail_ms: jnp.ndarray  # (n_luns,) f32 — busy_until clock per LUN
 
     # telemetry
     lat_hist: jnp.ndarray  # (telemetry.N_LAT_BINS,) f32 read-latency histogram
     w_lat_hist: jnp.ndarray  # (telemetry.N_LAT_BINS,) f32 write-latency histogram
 
     # counters (f32 scalars; summed per-chunk so precision is fine)
-    svc_sum_ms: jnp.ndarray  # total user-read service time (latency + xfer)
+    svc_sum_ms: jnp.ndarray  # total recorded user-read latency (queueing
+    #   delay when open-loop, + sense/retry + xfer)
+    q_sum_ms: jnp.ndarray  # total read queueing delay (0 in closed loop)
     n_reads: jnp.ndarray
     n_writes: jnp.ndarray
     n_retries: jnp.ndarray
@@ -123,7 +130,9 @@ def init_state(cfg: geometry.SimConfig, initial_pe=None) -> SSDState:
         clock_ms=jnp.float32(0.0),
         lun_busy_ms=jnp.zeros((cfg.n_luns,), jnp.float32),
         chan_busy_ms=jnp.zeros((cfg.n_channels,), jnp.float32),
+        lun_avail_ms=jnp.zeros((cfg.n_luns,), jnp.float32),
         svc_sum_ms=jnp.float32(0.0),
+        q_sum_ms=jnp.float32(0.0),
         n_reads=jnp.float32(0.0),
         n_writes=jnp.float32(0.0),
         n_retries=jnp.float32(0.0),

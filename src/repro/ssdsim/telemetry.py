@@ -61,12 +61,22 @@ def percentiles(hist, qs=(0.5, 0.95, 0.99, 0.999)) -> dict[float, float]:
     if total <= 0:
         return {q: 0.0 for q in qs}
     cum = np.cumsum(h)
+    nonempty = np.nonzero(h > 0)[0]
     for q in qs:
         target = q * total
         b = int(np.searchsorted(cum, target, side="left"))
-        b = min(b, N_LAT_BINS - 1)
+        # ``searchsorted`` can land on an empty bin when the target count
+        # falls exactly on a cumulative boundary, or past the last bin when
+        # ``q * total`` exceeds ``cum[-1]`` by a rounding error (np.sum is
+        # pairwise, np.cumsum sequential). Interpolating inside a zero-count
+        # bin via the eps guard would return that bin's upper edge — a
+        # latency no sample ever had — so advance to the next non-empty bin
+        # (clamped to the last non-empty one).
+        if b >= N_LAT_BINS or h[b] <= 0:
+            later = nonempty[nonempty > b] if b < N_LAT_BINS else nonempty[:0]
+            b = int(later[0]) if len(later) else int(nonempty[-1])
         prev = cum[b - 1] if b > 0 else 0.0
-        frac = (target - prev) / max(h[b], 1e-12)
+        frac = (target - prev) / h[b]
         frac = min(max(frac, 0.0), 1.0)
         lo, hi = edges[b], edges[b + 1]
         out[q] = float(lo * (hi / lo) ** frac)

@@ -2,6 +2,12 @@
 over an 8 GiB dataset, plus sequential and mixed read/write traces for the
 motivation figures. Host-side numpy; the engine consumes padded
 (n_chunks, chunk) arrays.
+
+Open-loop arrivals: every builder can attach per-request arrival timestamps
+(``arrival_rate`` in IOPS, Poisson or constant-rate interarrivals). A trace
+carrying an ``"arrival_ms"`` array drives the engine's queueing-aware
+service loop; ``arrival_rate=None`` (the default) keeps the classic
+closed-loop trace, where requests are serviced back-to-back.
 """
 
 from __future__ import annotations
@@ -12,17 +18,63 @@ from repro.ssdsim import geometry
 from repro.ssdsim.engine import OP_READ, OP_WRITE
 
 
-def _pack(cfg: geometry.SimConfig, lpn: np.ndarray, op: np.ndarray):
+def _pack(cfg: geometry.SimConfig, lpn: np.ndarray, op: np.ndarray,
+          arrival_ms: np.ndarray | None = None):
     c = cfg.chunk
     n = len(lpn)
     n_chunks = -(-n // c)
     pad = n_chunks * c - n
     lpn = np.concatenate([lpn, np.full(pad, -1, np.int32)])
     op = np.concatenate([op, np.full(pad, OP_READ, np.int32)])
-    return {
+    tr = {
         "lpn": lpn.reshape(n_chunks, c).astype(np.int32),
         "op": op.reshape(n_chunks, c).astype(np.int32),
     }
+    if arrival_ms is not None:
+        # padding lanes inherit the last real arrival so the chunk's clock
+        # never jumps past the payload
+        last = arrival_ms[-1] if n else 0.0
+        arr = np.concatenate([arrival_ms, np.full(pad, last, np.float64)])
+        tr["arrival_ms"] = arr.reshape(n_chunks, c).astype(np.float32)
+    return tr
+
+
+def poisson_arrival_ms(n_requests: int, rate_iops: float, seed: int = 0) -> np.ndarray:
+    """Poisson-process arrival timestamps (ms): exponential interarrivals at
+    ``rate_iops`` requests/second, starting from t=0."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1000.0 / rate_iops, size=n_requests)
+    t = np.cumsum(gaps)
+    return t - gaps[0] if n_requests else t
+
+
+def constant_arrival_ms(n_requests: int, rate_iops: float) -> np.ndarray:
+    """Constant-rate arrival timestamps (ms) at ``rate_iops`` requests/s."""
+    return np.arange(n_requests, dtype=np.float64) * (1000.0 / rate_iops)
+
+
+def build_arrivals(n_requests: int, rate_iops: float, dist: str = "poisson",
+                   seed: int = 0) -> np.ndarray:
+    if dist == "poisson":
+        return poisson_arrival_ms(n_requests, rate_iops, seed=seed)
+    if dist == "constant":
+        return constant_arrival_ms(n_requests, rate_iops)
+    raise ValueError(f"unknown arrival distribution {dist!r}")
+
+
+def attach_arrivals(cfg: geometry.SimConfig, trace: dict, rate_iops: float,
+                    dist: str = "poisson", seed: int = 0) -> dict:
+    """Attach open-loop arrival timestamps to an already-packed trace.
+
+    Works on any engine trace (scenario library, MSR replay with the
+    timestamp column stripped, ...); the arrival stream covers every lane
+    including padding, which is harmless since padded lanes are inactive.
+    """
+    n = trace["lpn"].size
+    arr = build_arrivals(n, rate_iops, dist=dist, seed=seed)
+    out = dict(trace)
+    out["arrival_ms"] = arr.reshape(trace["lpn"].shape).astype(np.float32)
+    return out
 
 
 def zipf_probs(n: int, theta: float) -> np.ndarray:
@@ -32,7 +84,9 @@ def zipf_probs(n: int, theta: float) -> np.ndarray:
 
 
 def zipf_read_trace(cfg: geometry.SimConfig, n_requests: int, theta: float,
-                    seed: int = 0, hot_fraction_cap: float = 1.0):
+                    seed: int = 0, hot_fraction_cap: float = 1.0,
+                    arrival_rate: float | None = None,
+                    arrival_dist: str = "poisson"):
     """Random reads with Zipf(theta) popularity. Hot ranks are scattered
     over the logical space by a fixed permutation (FIO's zipf behaves the
     same way: popularity rank is decoupled from LBA locality)."""
@@ -43,7 +97,9 @@ def zipf_read_trace(cfg: geometry.SimConfig, n_requests: int, theta: float,
     ranks = rng.choice(n_ranked, size=n_requests, p=p)
     perm = rng.permutation(L)[:n_ranked]
     lpn = perm[ranks].astype(np.int32)
-    return _pack(cfg, lpn, np.full(n_requests, OP_READ, np.int32))
+    arr = None if arrival_rate is None else build_arrivals(
+        n_requests, arrival_rate, dist=arrival_dist, seed=seed)
+    return _pack(cfg, lpn, np.full(n_requests, OP_READ, np.int32), arr)
 
 
 def seq_read_trace(cfg: geometry.SimConfig, n_requests: int, start: int = 0):
@@ -58,13 +114,25 @@ def uniform_read_trace(cfg: geometry.SimConfig, n_requests: int, seed: int = 0):
 
 
 def mixed_trace(cfg: geometry.SimConfig, n_requests: int, theta: float,
-                read_frac: float = 0.7, seed: int = 0):
-    """Zipf reads interleaved with uniform-random overwrites."""
+                read_frac: float = 0.7, seed: int = 0,
+                arrival_rate: float | None = None,
+                arrival_dist: str = "poisson"):
+    """Zipf reads interleaved with uniform-random overwrites (paper §V-A).
+
+    Reads follow Zipf(theta) popularity over a fixed permutation; write
+    targets are drawn uniformly over the whole logical space, independent of
+    the read popularity ranking.
+    """
     rng = np.random.default_rng(seed)
     L = cfg.n_logical
     p = zipf_probs(L, theta)
     ranks = rng.choice(L, size=n_requests, p=p)
     perm = rng.permutation(L)
-    lpn = perm[ranks].astype(np.int32)
-    op = np.where(rng.random(n_requests) < read_frac, OP_READ, OP_WRITE).astype(np.int32)
-    return _pack(cfg, lpn, op)
+    r_lpn = perm[ranks]
+    w_lpn = rng.integers(0, L, size=n_requests)
+    is_read = rng.random(n_requests) < read_frac
+    lpn = np.where(is_read, r_lpn, w_lpn).astype(np.int32)
+    op = np.where(is_read, OP_READ, OP_WRITE).astype(np.int32)
+    arr = None if arrival_rate is None else build_arrivals(
+        n_requests, arrival_rate, dist=arrival_dist, seed=seed)
+    return _pack(cfg, lpn, op, arr)

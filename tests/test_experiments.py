@@ -53,6 +53,44 @@ class TestTelemetry:
         pct = telemetry.percentiles(np.zeros(telemetry.N_LAT_BINS))
         assert all(v == 0.0 for v in pct.values())
 
+    def test_single_bin_histogram_stays_in_bin(self):
+        """All mass in one bin: every quantile must interpolate inside that
+        bin's edges, never land in a neighboring empty bin."""
+        edges = telemetry.bin_edges_us()
+        for b in (0, 17, telemetry.N_LAT_BINS - 1):
+            h = np.zeros(telemetry.N_LAT_BINS)
+            h[b] = 7.0
+            pct = telemetry.percentiles(h, qs=(0.5, 0.95, 0.999, 1.0))
+            for q, v in pct.items():
+                # 1-ulp slack: lo * (hi/lo)**1.0 re-rounds the upper edge
+                assert edges[b] * (1 - 1e-12) <= v <= edges[b + 1] * (1 + 1e-12), (b, q, v)
+
+    def test_exact_boundary_quantile(self):
+        """Target count falling exactly on a cumulative boundary (q=0.5 of
+        [2, 0, 2]) must resolve at the boundary, not inside the empty bin."""
+        edges = telemetry.bin_edges_us()
+        h = np.zeros(telemetry.N_LAT_BINS)
+        h[0], h[2] = 2.0, 2.0
+        pct = telemetry.percentiles(h, qs=(0.5,))
+        assert pct[0.5] <= edges[1] * (1 + 1e-9)
+        # monotone across the empty gap
+        pct2 = telemetry.percentiles(h, qs=(0.5, 0.75, 0.999))
+        assert pct2[0.5] <= pct2[0.75] <= pct2[0.999] <= edges[3]
+
+    def test_target_overshoot_does_not_hit_empty_tail_bin(self):
+        """np.sum (pairwise) can exceed np.cumsum[-1] (sequential) by an
+        ulp, pushing q*total past the last cumulative count. Exercise the
+        overshoot deterministically with q slightly above 1: the quantile
+        must clamp to the last non-empty bin instead of interpolating inside
+        the empty tail via the eps guard (returning ~80 ms for a histogram
+        whose slowest sample is far faster)."""
+        h = np.zeros(telemetry.N_LAT_BINS)
+        h[:20] = 1.0  # empty tail from bin 20 on
+        edges = telemetry.bin_edges_us()
+        for q in (1.0, 1.0 + 1e-9):  # boundary + guaranteed overshoot
+            pct = telemetry.percentiles(h, qs=(q,))
+            assert pct[q] <= edges[20] * (1 + 1e-9), (q, pct[q])
+
     def test_engine_histogram_totals_reads(self):
         tr = workload.zipf_read_trace(TINY, 4_000, 1.2, seed=0)
         s, ys = engine.run(TINY, tr)
@@ -139,10 +177,13 @@ class TestTraceReplay:
             "offset": np.array([0, 16 * 1024 + 8192], np.int64),
             "size": np.array([16 * 1024, 2 * 16 * 1024], np.int64),
         }
-        lpn, op = traces.records_to_page_requests(TINY, rec)
+        lpn, op, arr = traces.records_to_page_requests(TINY, rec)
         assert len(lpn) == 1 + 3
         assert (op == [OP_READ, OP_WRITE, OP_WRITE, OP_WRITE]).all()
         np.testing.assert_array_equal(lpn, [0, 1, 2, 3])
+        # every page of an I/O inherits its arrival time (filetime ticks
+        # rebased to ms: 1 tick = 100 ns = 1e-4 ms)
+        np.testing.assert_allclose(arr, [0.0, 1e-4, 1e-4, 1e-4])
 
     def test_replay_end_to_end(self):
         tr = registry.build("msr_sample", TINY, 2_000, seed=0)

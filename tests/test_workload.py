@@ -72,6 +72,28 @@ class TestTraces:
         reads = (tr["op"].reshape(-1)[:n] == OP_READ).sum()
         assert abs(reads / n - 0.7) < 0.02  # binomial tolerance
 
+    def test_mixed_trace_write_targets_uniform(self):
+        """Regression (ISSUE 3): write LPNs must be uniform-random over the
+        logical space (paper §V-A), not drawn from the Zipf-permuted read
+        stream — reads stay heavily skewed, writes must not be."""
+        n = 40_000
+        tr = workload.mixed_trace(TINY, n, theta=1.2, read_frac=0.5, seed=0)
+        lpn = tr["lpn"].reshape(-1)[:n]
+        op = tr["op"].reshape(-1)[:n]
+        r_lpn = lpn[op == OP_READ]
+        w_lpn = lpn[op == OP_WRITE]
+        L = TINY.n_logical
+        r_counts = np.bincount(r_lpn, minlength=L)
+        w_counts = np.bincount(w_lpn, minlength=L)
+        # reads: Zipf(1.2) concentrates a large share on the few hottest
+        # pages; writes: the most-written page of a uniform draw stays tiny
+        assert np.sort(r_counts)[-10:].sum() > 0.2 * len(r_lpn)
+        assert w_counts.max() < 0.005 * len(w_lpn)
+        # chi-square-style uniformity: variance of uniform multinomial
+        # counts stays near its expectation (p ~ n/L per page)
+        expect = len(w_lpn) / L
+        assert w_counts.var() < 3.0 * expect
+
     def test_lpns_in_range(self):
         for tr in (
             workload.zipf_read_trace(TINY, 5_000, 1.2, seed=3),
