@@ -1,0 +1,140 @@
+"""CI benchmark regression gate: compare a fresh bench artifact against the
+committed baseline and fail the job on large slowdowns.
+
+Compares every metric row whose name ends in ``--suffix`` (default
+``/chunks_per_sec``, the engine-throughput headline) between the measured
+artifact and the committed baseline. Single runs on shared CI runners are
+noisy — a 2x spread run-to-run is normal — so the gate is deliberately
+generous: it FAILS only below ``--fail-below`` (default 0.5x baseline, which
+a real regression like an accidentally reintroduced ``jnp.unique`` or an
+un-fused reclaim pass clears by a wide margin) and WARNS between
+``--warn-below`` and the fail floor. The comparison table is appended to
+``$GITHUB_STEP_SUMMARY`` when set (or ``--summary PATH``).
+
+  PYTHONPATH=src python -m benchmarks.check_regression \\
+      --measured bench-artifacts/BENCH_engine.json \\
+      --baseline benchmarks/BENCH_engine.json --baseline-key tiny_baseline
+
+``--baseline-key`` selects a sub-document of the baseline JSON: the
+committed ``BENCH_engine.json`` carries the full-geometry rows at top level
+and the CI-geometry (``--tiny``) rows under ``"tiny_baseline"``, so the
+smoke run compares like with like.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+FAIL_BELOW = 0.5
+WARN_BELOW = 0.8
+SUFFIX = "/chunks_per_sec"
+
+
+def rows_to_metrics(doc: dict, suffix: str) -> dict[str, float]:
+    return {name: float(value) for name, value, _unit in doc.get("rows", [])
+            if name.endswith(suffix)}
+
+
+def gate(measured_doc: dict, baseline_doc: dict, fail_below: float = FAIL_BELOW,
+         warn_below: float = WARN_BELOW, suffix: str = SUFFIX):
+    """Compare matching metric rows. Returns a list of
+    ``(name, measured, baseline, ratio, status)`` with status in
+    OK/WARN/FAIL. Raises if the docs share no comparable rows — a gate that
+    compares nothing must not pass silently."""
+    measured = rows_to_metrics(measured_doc, suffix)
+    baseline = rows_to_metrics(baseline_doc, suffix)
+    common = sorted(set(measured) & set(baseline))
+    if not common:
+        raise ValueError(
+            f"no common rows ending in {suffix!r}: measured has "
+            f"{sorted(measured)}, baseline has {sorted(baseline)}"
+        )
+    # a baseline row with no measured counterpart means a guarded section
+    # silently vanished from the bench — that must not pass as green
+    missing = sorted(set(baseline) - set(measured))
+    if missing:
+        raise ValueError(
+            f"baseline rows missing from the measured artifact: {missing} "
+            "(did a bench section stop emitting?)"
+        )
+    out = []
+    for name in common:
+        ratio = measured[name] / baseline[name]
+        status = ("FAIL" if ratio < fail_below
+                  else "WARN" if ratio < warn_below else "OK")
+        out.append((name, measured[name], baseline[name], ratio, status))
+    return out
+
+
+def render_markdown(entries, fail_below: float, warn_below: float) -> str:
+    icon = {"OK": "✅", "WARN": "⚠️", "FAIL": "❌"}
+    lines = [
+        "### Benchmark regression gate",
+        "",
+        f"fail < {fail_below:g}x baseline · warn < {warn_below:g}x "
+        "(single CI runs are noisy; only large slowdowns fail)",
+        "",
+        "| metric | measured | baseline | ratio | status |",
+        "|---|---:|---:|---:|:---:|",
+    ]
+    for name, m, b, ratio, status in entries:
+        lines.append(
+            f"| `{name}` | {m:,.1f} | {b:,.1f} | {ratio:.2f}x "
+            f"| {icon[status]} {status} |"
+        )
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--measured", required=True, help="fresh bench artifact")
+    ap.add_argument("--baseline", required=True, help="committed baseline JSON")
+    ap.add_argument("--baseline-key", default=None,
+                    help="use this sub-document of the baseline JSON "
+                         "(e.g. tiny_baseline for the CI geometry)")
+    ap.add_argument("--suffix", default=SUFFIX,
+                    help="compare rows whose name ends with this")
+    ap.add_argument("--fail-below", type=float, default=FAIL_BELOW)
+    ap.add_argument("--warn-below", type=float, default=WARN_BELOW)
+    ap.add_argument("--summary", default=None, metavar="PATH",
+                    help="append the markdown table here "
+                         "(default: $GITHUB_STEP_SUMMARY when set)")
+    args = ap.parse_args(argv)
+
+    measured_doc = json.loads(Path(args.measured).read_text())
+    baseline_doc = json.loads(Path(args.baseline).read_text())
+    if args.baseline_key:
+        try:
+            baseline_doc = baseline_doc[args.baseline_key]
+        except KeyError:
+            print(f"::error::baseline {args.baseline} has no key "
+                  f"{args.baseline_key!r}")
+            return 2
+
+    entries = gate(measured_doc, baseline_doc, args.fail_below,
+                   args.warn_below, args.suffix)
+
+    for name, m, b, ratio, status in entries:
+        print(f"{status:4s} {name}: {m:,.1f} vs baseline {b:,.1f} "
+              f"({ratio:.2f}x)")
+        if status == "WARN":
+            print(f"::warning::{name} at {ratio:.2f}x baseline "
+                  f"({m:,.1f} vs {b:,.1f})")
+        elif status == "FAIL":
+            print(f"::error::{name} regressed to {ratio:.2f}x baseline "
+                  f"({m:,.1f} vs {b:,.1f}; fail floor {args.fail_below:g}x)")
+
+    summary = args.summary or os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(render_markdown(entries, args.fail_below, args.warn_below))
+
+    return 1 if any(e[4] == "FAIL" for e in entries) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

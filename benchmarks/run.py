@@ -43,6 +43,9 @@ def main() -> None:
     ap.add_argument("--artifacts", default=None, metavar="DIR",
                     help="write BENCH_*.json artifacts here (one per section, "
                          "plus the sweep section's per-run artifacts)")
+    ap.add_argument("--devices", default=None,
+                    help="shard the sweep section's run axis across N devices "
+                         "('all' = every visible device; default: vmap on one)")
     args = ap.parse_args()
 
     from benchmarks import paper_figs, sweep_bench, tiered_kv
@@ -60,7 +63,8 @@ def main() -> None:
         ("sweep", lambda: sweep_bench.sweep_tail_latency(
             24_000 if q else 80_000,
             msr_requests=8_000 if q else 24_000,
-            out_dir=args.artifacts)),
+            out_dir=args.artifacts,
+            devices=args.devices)),
         ("tiered_kv", lambda: tiered_kv.kv_policy_comparison(24 if q else 48)),
     ]
 

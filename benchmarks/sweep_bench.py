@@ -1,19 +1,33 @@
-"""Tail-latency sweep section for the benchmark harness.
+"""Sweep benchmark: tail-latency section for the harness plus the
+device-sharded scaling benchmark (DESIGN.md §7.3).
 
-Drives repro.experiments end-to-end: a vmapped 8-run grid (2 policies x 2
-wear stages x 2 seeds, one jit per policy group) on the read-disturb-hammer
-scenario — the workload where retries hurt p99 most — plus a replay of the
-bundled MSR-style sample trace. Emits per-run p50/p95/p99 read latency next
-to the mean, and the headline raro-vs-baseline p99 ratios the paper's
-"diverse workloads" claim rests on.
+Two entry points:
+
+``sweep_tail_latency``  — the ``benchmarks.run --only sweep`` section: a
+policy x wear x seed grid on the read-disturb-hammer scenario plus a replay
+of the bundled MSR-style sample trace, emitting per-run tail latencies and
+the headline raro-vs-baseline p99 ratios.
+
+``main`` (this module as a script) — the sweep *scaling* benchmark: the same
+grid executed by the single-device vmapped path and by the device-sharded
+``shard_map`` path, timed end to end (dispatch + execute + host summarize),
+written to ``BENCH_sweep.json``. The sharded path needs multiple visible
+devices; on a CPU-only host fake them with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the CI smoke does)
+or pass ``--fake-devices N`` before anything imports jax.
+
+  PYTHONPATH=src python -m benchmarks.sweep_bench [--smoke] [--devices N]
+      [--fake-devices N] [--repeats R] [--requests N] [--out DIR]
 """
 
 from __future__ import annotations
 
-import numpy as np
+import argparse
+import json
+import time
+from pathlib import Path
 
-from repro.experiments import sweep
-from repro.ssdsim import geometry
+import numpy as np
 
 
 def _p99_ratio_rows(results, scenario: str):
@@ -33,7 +47,13 @@ def _p99_ratio_rows(results, scenario: str):
     return rows
 
 
-def sweep_tail_latency(n_requests=80_000, msr_requests=24_000, out_dir=None):
+def sweep_tail_latency(n_requests=80_000, msr_requests=24_000, out_dir=None,
+                       devices=None):
+    """Tail-latency section rows; ``devices`` forwards to the sweep runner
+    (None = single-device vmap, N = shard the run axis across N devices)."""
+    from repro.experiments import sweep
+    from repro.ssdsim import geometry
+
     base = geometry.SimConfig(device_age_h=24.0)
     rows = []
 
@@ -45,7 +65,7 @@ def sweep_tail_latency(n_requests=80_000, msr_requests=24_000, out_dir=None):
         seeds=(0, 1),
         base=base,
     )
-    res = sweep.run_sweep(hammer, verbose=True)
+    res = sweep.run_sweep(hammer, verbose=True, devices=devices)
     for r in res:
         rows += sweep.result_rows(r)
     rows += _p99_ratio_rows(res, "read_disturb_hammer")
@@ -59,7 +79,7 @@ def sweep_tail_latency(n_requests=80_000, msr_requests=24_000, out_dir=None):
         seeds=(0,),
         base=base,
     )
-    res_msr = sweep.run_sweep(msr, verbose=True)
+    res_msr = sweep.run_sweep(msr, verbose=True, devices=devices)
     for r in res_msr:
         rows += sweep.result_rows(r)
     rows += _p99_ratio_rows(res_msr, "msr_sample")
@@ -68,3 +88,126 @@ def sweep_tail_latency(n_requests=80_000, msr_requests=24_000, out_dir=None):
         paths = sweep.write_artifacts(res + res_msr, out_dir)
         print(f"# wrote {len(paths)} BENCH_*.json artifacts to {out_dir}", flush=True)
     return rows
+
+
+# ------------------------- sharded scaling bench ---------------------------
+
+
+def scaling_spec(n_requests: int, seeds: int, smoke: bool):
+    """The grid the scaling bench times: 2 wear stages x ``seeds`` seeds per
+    policy group, on the unit-test geometry when ``smoke``."""
+    from repro.experiments import sweep
+    from repro.ssdsim import geometry
+
+    base = (geometry.tiny_config() if smoke
+            else geometry.SimConfig(device_age_h=24.0))
+    return sweep.SweepSpec(
+        scenario="read_disturb_hammer",
+        n_requests=n_requests,
+        policies=(geometry.BASELINE, geometry.RARO),
+        initial_pe=(166, 833),
+        seeds=tuple(range(seeds)),
+        base=base,
+    )
+
+
+def bench_scaling(spec, n_devices: int, repeats: int):
+    """Time ``run_sweep`` end to end (dispatch + execute + batched
+    device_get + host summarize) on the vmapped single-device path and
+    sharded across ``n_devices``; after timing, the two paths' last result
+    sets are asserted identical (the equivalence the tests guarantee,
+    re-checked on the benchmark grid for free). Yields harness rows."""
+    from repro.experiments import sweep
+
+    n_runs = spec.n_runs()
+    repeats = max(repeats, 1)  # the loop must bind res / divide by repeats
+
+    def timed(devices):
+        sweep.run_sweep(spec, devices=devices)  # warm-up: compile + page in
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            res = sweep.run_sweep(spec, devices=devices)
+        return (time.perf_counter() - t0) / repeats, res
+
+    dt1, res1 = timed(None)
+    dtn, resn = timed(n_devices)
+    sweep.assert_results_identical(res1, resn)
+
+    yield "sweep/scaling/n_runs", float(n_runs), "runs"
+    yield "sweep/scaling/vmap1/wall_s", dt1, "s"
+    yield "sweep/scaling/vmap1/runs_per_sec", n_runs / dt1, "runs/s"
+    yield f"sweep/scaling/sharded{n_devices}/wall_s", dtn, "s"
+    yield f"sweep/scaling/sharded{n_devices}/runs_per_sec", n_runs / dtn, "runs/s"
+    yield f"sweep/scaling/sharded{n_devices}/speedup", dt1 / dtn, "x"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="unit-test geometry + small grid (CI)")
+    ap.add_argument("--devices", default=None,
+                    help="device count for the sharded pass, or 'all' "
+                         "(default: every visible device)")
+    ap.add_argument("--fake-devices", type=int, default=None, metavar="N",
+                    help="set XLA_FLAGS=--xla_force_host_platform_device_count"
+                         "=N before jax loads (local convenience; CI sets the "
+                         "env var itself)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--seeds", type=int, default=4,
+                    help="seeds per (policy, wear) cell of the timed grid")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default=".", metavar="DIR",
+                    help="directory for the BENCH_sweep.json artifact")
+    args = ap.parse_args()
+
+    from repro.hostdev import fake_host_devices  # jax-free import
+
+    fake_host_devices(args.fake_devices)
+
+    import jax  # after the XLA_FLAGS mutation above
+
+    from repro.experiments import sweep
+
+    n_devices = (
+        len(jax.devices()) if args.devices in (None, "all")
+        else int(args.devices)
+    )
+    # fail fast: the sharded pass runs *after* the vmapped warm-up+timing,
+    # so without this an invalid --devices only errors minutes in
+    sweep.resolve_devices(n_devices)
+    spec = scaling_spec(
+        args.requests or (16 * 128 if args.smoke else 40_000),
+        args.seeds, args.smoke,
+    )
+
+    rows = []
+    print("name,value,unit")
+    for row in bench_scaling(spec, n_devices, args.repeats):
+        rows.append(list(row))
+        n, v, u = row
+        print(f"{n},{v:.4f},{u}", flush=True)
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    doc = {
+        "bench": "sweep",
+        "config": {
+            "smoke": args.smoke,
+            "scenario": spec.scenario,
+            "n_requests": spec.n_requests,
+            "n_runs": spec.n_runs(),
+            "seeds": len(spec.seeds),
+            "devices": n_devices,
+            "visible_devices": len(jax.devices()),
+            "platform": jax.devices()[0].platform,
+            "repeats": args.repeats,
+        },
+        "rows": rows,
+    }
+    p = out / "BENCH_sweep.json"
+    p.write_text(json.dumps(doc, indent=1, sort_keys=True))
+    print(f"# wrote {p}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,34 +1,47 @@
 """Experiments-subsystem tour: batched sweeps + tail latency in ~1 minute.
 
-Runs a vmapped policy x wear x seed grid on any registered scenario
+Runs a batched policy x wear x seed grid on any registered scenario
 (synthetic generators or the bundled MSR-style trace replay) and prints a
 tail-latency table — the metric read retries actually damage. Per-run
-BENCH_*.json artifacts land in --out.
+BENCH_*.json artifacts land in --out. --devices N shards the run axis
+across devices (identical results); --fake-devices N demos it on CPU.
 
   PYTHONPATH=src python examples/sweep_experiments.py \\
-      [--scenario read_disturb_hammer] [--requests 24000] [--out bench_out]
+      [--scenario read_disturb_hammer] [--requests 24000] [--out bench_out] \\
+      [--devices N|all] [--fake-devices N]
   PYTHONPATH=src python examples/sweep_experiments.py --list
 """
 
 import argparse
 
-from repro.experiments import registry, sweep
-from repro.ssdsim import geometry
-
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--scenario", default="read_disturb_hammer",
-                    choices=registry.names())
+    ap.add_argument("--scenario", default="read_disturb_hammer")
     ap.add_argument("--requests", type=int, default=24_000)
     ap.add_argument("--seeds", type=int, default=2)
+    ap.add_argument("--devices", default=None,
+                    help="shard the run axis across N devices ('all' = every "
+                         "visible device; default: single-device vmap)")
+    ap.add_argument("--fake-devices", type=int, default=None, metavar="N",
+                    help="fake N host devices via XLA_FLAGS (set before jax "
+                         "loads) to try --devices on a CPU-only box")
     ap.add_argument("--out", default=None, help="artifact directory")
     ap.add_argument("--list", action="store_true", help="list scenarios and exit")
     args = ap.parse_args()
 
+    from repro.hostdev import fake_host_devices  # jax-free import
+
+    fake_host_devices(args.fake_devices)
+
+    from repro.experiments import registry, sweep
+    from repro.ssdsim import geometry
+
     if args.list:
         print("registered scenarios:", ", ".join(registry.names()))
         return
+    if args.scenario not in registry.names():
+        ap.error(f"unknown scenario {args.scenario!r}; have {registry.names()}")
 
     spec = sweep.SweepSpec(
         scenario=args.scenario,
@@ -41,7 +54,7 @@ def main():
     print(f"== sweep: {args.scenario}, {spec.n_runs()} runs "
           f"({len(spec.policies)} policies x {len(spec.initial_pe)} wear "
           f"stages x {args.seeds} seeds), one jit per policy ==")
-    results = sweep.run_sweep(spec, verbose=True)
+    results = sweep.run_sweep(spec, verbose=True, devices=args.devices)
 
     hdr = f"{'run':<44} {'mean us':>9} {'p50 us':>9} {'p95 us':>9} {'p99 us':>9} {'p999 us':>9}"
     print(hdr)

@@ -27,6 +27,26 @@ def tail_latency_sweep(scenario: str = "read_disturb_hammer",
     )
 
 
+def sharded_sweep(scenario: str = "read_disturb_hammer",
+                  n_requests: int = 80_000,
+                  stages=("young", "middle", "old"), seeds=(0, 1, 2, 3)):
+    """Device-sharded experiment grid: 3 wear stages x 4 seeds = 12 runs per
+    policy group, sized so the run axis divides evenly across 2/3/4/6/12
+    devices (uneven counts still work — the runner pads). Execute with
+    ``run_sweep(spec, devices=N)``; on a CPU-only host fake the devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    from repro.experiments.sweep import SweepSpec
+
+    return SweepSpec(
+        scenario=scenario,
+        n_requests=n_requests,
+        policies=(BASELINE, RARO),
+        initial_pe=tuple(STAGE_PE[s] for s in stages),
+        seeds=tuple(seeds),
+        base=SimConfig(device_age_h=24.0),
+    )
+
+
 def latency_load_sweep(scenario: str = "hammer_openloop",
                        n_requests: int = 80_000,
                        rate_iops: float = 50_000.0,

@@ -1,18 +1,30 @@
-"""Vmapped sweep orchestration (DESIGN.md §7.3).
+"""Device-sharded sweep orchestration (DESIGN.md §7.3).
 
 Runs a (policy x wear x seed x knob x scenario) grid through the simulator
 with one compiled program per *static* group. The split:
 
-  batched through ``jax.vmap`` (one jit, stacked run axis):
+  batched along a stacked run axis (one jit per group):
       seeds / scenario draws (different traces, same shape),
       ``r1``, ``r2_override``, ``initial_pe``  (RunKnobs — traced scalars)
   looped in Python (change trace shapes or compiled branches):
       policy, geometry/SimConfig, scenario name, request count
 
-so the canonical 2-policy x 2-wear x 2-seed grid compiles exactly twice and
-executes 4 runs per dispatch. Results are per-run dicts (engine.summarize +
-run metadata) and optional ``BENCH_*.json`` artifacts in the harness's
-``name,value,unit`` row format.
+The stacked run axis executes either on a single device through ``jax.vmap``
+(``devices=None``, the original path) or sharded across a 1-D device mesh
+via ``shard_map`` (``devices=N`` / a device list): each device runs the
+identical vmapped program on its slice of the runs, so the results match the
+single-device path bit for bit. Grids that don't divide the device count are
+padded with dummy replicas of the last run; the pads are dropped on the host
+and never summarized.
+
+Dispatch is asynchronous: every policy group is traced/compiled and enqueued
+before any result is awaited, so group k+1's compile overlaps group k's
+execution. Summarization happens afterwards, off the dispatch critical path
+— one batched ``jax.device_get`` of the stacked final states per group, then
+a host-side ``engine.summarize`` loop over numpy leaves.
+
+Results are per-run dicts (engine.summarize + run metadata) and optional
+``BENCH_*.json`` artifacts in the harness's ``name,value,unit`` row format.
 """
 
 from __future__ import annotations
@@ -25,9 +37,11 @@ from functools import partial
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.experiments import registry
 from repro.ssdsim import engine, geometry, policies
@@ -99,10 +113,10 @@ def expand(spec: SweepSpec) -> list[RunSpec]:
     ]
 
 
-@partial(jax.jit, static_argnums=(0, 3))
-def _sweep_jit(cfg: geometry.SimConfig, lpns, ops, has_writes: bool,
+def _run_batch(cfg: geometry.SimConfig, has_writes: bool, lpns, ops,
                knobs: policies.RunKnobs, arrival_ms=None):
-    """Run a stacked batch of traces; everything dynamic rides the vmap axis.
+    """Vmapped body shared by both executors; everything dynamic rides the
+    stacked run axis.
 
     ``lpns``/``ops``: (R, n_chunks, chunk); ``knobs``: (R,) fields;
     ``arrival_ms``: (R, n_chunks, chunk) f32 or None (closed loop). Returns
@@ -124,15 +138,107 @@ def _sweep_jit(cfg: geometry.SimConfig, lpns, ops, has_writes: bool,
     return jax.vmap(one)(lpns, ops, knobs, arrival_ms)
 
 
+@partial(jax.jit, static_argnums=(0, 3))
+def _sweep_jit(cfg: geometry.SimConfig, lpns, ops, has_writes: bool,
+               knobs: policies.RunKnobs, arrival_ms=None):
+    """Single-device executor: the whole run axis on one ``jax.vmap``."""
+    return _run_batch(cfg, has_writes, lpns, ops, knobs, arrival_ms)
+
+
+@partial(jax.jit, static_argnums=(0, 3, 6))
+def _sweep_sharded_jit(cfg: geometry.SimConfig, lpns, ops, has_writes: bool,
+                       knobs: policies.RunKnobs, arrival_ms, mesh: Mesh):
+    """Sharded executor: the run axis (a multiple of the mesh size — the
+    caller pads) is split across ``mesh``'s devices via ``shard_map``; each
+    device runs the identical vmapped program on its local runs, so results
+    are bitwise identical to the single-device path. No collectives — runs
+    are independent, making the shard axis embarrassingly parallel."""
+    spec = P(_MESH_AXIS)
+    # check_rep=False: nothing here is replicated and there are no
+    # collectives, but the checker mis-types the engine's pressure-gated
+    # lax.cond branches (jax 0.4.x) — disabling it changes nothing else
+    if arrival_ms is None:
+        fn = shard_map(
+            lambda l, o, k: _run_batch(cfg, has_writes, l, o, k),
+            mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec,
+            check_rep=False,
+        )
+        return fn(lpns, ops, knobs)
+    fn = shard_map(
+        lambda l, o, k, a: _run_batch(cfg, has_writes, l, o, k, a),
+        mesh=mesh, in_specs=(spec, spec, spec, spec), out_specs=spec,
+        check_rep=False,
+    )
+    return fn(lpns, ops, knobs, arrival_ms)
+
+
+_MESH_AXIS = "runs"
+
+
+def resolve_devices(devices):
+    """Normalize the ``devices`` argument to a tuple of jax devices (or None
+    for the single-device vmap path). Accepts an int count, ``"all"``, an
+    explicit device sequence, or a numeric string — so CLI entry points can
+    forward their ``--devices`` argument verbatim (and validate it early via
+    this function without paying for trace building first)."""
+    if devices is None:
+        return None
+    if devices == "all":
+        return tuple(jax.devices())
+    if isinstance(devices, str):
+        devices = int(devices)
+    if isinstance(devices, int):
+        avail = jax.devices()
+        if devices < 1:
+            raise ValueError(f"devices must be >= 1, got {devices}")
+        if devices > len(avail):
+            raise ValueError(
+                f"requested {devices} devices but only {len(avail)} visible "
+                f"(hint: XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                f"fakes N host devices)"
+            )
+        return tuple(avail[:devices])
+    return tuple(devices)
+
+
 def _take_run(stacked, i: int):
     return jax.tree_util.tree_map(lambda x: x[i], stacked)
 
 
-def run_sweep(spec: SweepSpec, threads: int = 4, verbose: bool = False):
+def assert_results_identical(a, b):
+    """Assert two ``run_sweep`` result lists are the same runs in the same
+    order with every summarize value exactly equal — the sharded-executor
+    guarantee. One checker shared by the equivalence tests and the scaling
+    benchmark's self-check; raises explicitly (not bare ``assert``) so the
+    benchmark keeps its guarantee under ``python -O``."""
+    if len(a) != len(b):
+        raise AssertionError(f"{len(a)} runs vs {len(b)}")
+    for ra, rb in zip(a, b):
+        if ra["run"] != rb["run"]:
+            raise AssertionError(f"run order diverged: {ra['run']} vs {rb['run']}")
+        if ra.keys() != rb.keys():
+            raise AssertionError(f"metric keys diverged for {ra['run']['tag']}")
+        for k in ra:
+            if k != "run":
+                np.testing.assert_array_equal(
+                    np.asarray(ra[k]), np.asarray(rb[k]),
+                    err_msg=f"{ra['run']['tag']}/{k}",
+                )
+
+
+def run_sweep(spec: SweepSpec, threads: int = 4, verbose: bool = False,
+              devices=None):
     """Execute the grid. Returns one result dict per run: everything from
     ``engine.summarize`` (mean + p50/p95/p99/p999 read latency, IOPS,
     capacity, ...) plus the run's metadata under ``"run"``.
+
+    ``devices`` selects the executor: ``None`` keeps the whole run axis on
+    one device (``jax.vmap``); an int N / ``"all"`` / a device sequence
+    shards the run axis across those devices (identical results — see
+    :func:`_sweep_sharded_jit`). Every policy group is dispatched before any
+    result is fetched, so compile and execution overlap across groups.
     """
+    devs = resolve_devices(devices)  # validate before the trace-build cost
     runs = expand(spec)
     kw = dict(spec.scenario_kw)
     if len(spec.seeds) > 1 and registry.is_seed_invariant(spec.scenario):
@@ -159,32 +265,64 @@ def run_sweep(spec: SweepSpec, threads: int = 4, verbose: bool = False):
             stacklevel=2,
         )
 
-    results = []
+    mesh = Mesh(np.asarray(devs), (_MESH_AXIS,)) if devs is not None else None
+    run_sharding = (
+        NamedSharding(mesh, P(_MESH_AXIS)) if mesh is not None else None
+    )
+
+    # ---- phase 1: dispatch every policy group (nothing blocks on results;
+    # group k+1's trace/compile overlaps group k's execution) ----
+    pending = []
     for pol in spec.policies:  # static axis -> one compile each
         group = [r for r in runs if r.policy == pol]
         cfg = replace(spec.base, policy=pol)
-        lpns = jnp.stack([jnp.asarray(traces[r.seed]["lpn"], jnp.int32) for r in group])
-        ops = jnp.stack([jnp.asarray(traces[r.seed]["op"], jnp.int32) for r in group])
+        # pad uneven grids (and grids smaller than the device count) with
+        # dummy replicas of the last run so the run axis divides the mesh;
+        # the pads are dropped on the host below, never summarized
+        n_pad = (-len(group)) % len(devs) if devs is not None else 0
+        padded = group + [group[-1]] * n_pad
+        # stacked on the host (numpy): the vmap path lets jit move them to
+        # the default device as before, the sharded path transfers each
+        # array exactly once, straight to its run-sharded layout
+        lpns = np.stack([np.asarray(traces[r.seed]["lpn"], np.int32) for r in padded])
+        ops = np.stack([np.asarray(traces[r.seed]["op"], np.int32) for r in padded])
         arr = (
-            jnp.stack([jnp.asarray(traces[r.seed]["arrival_ms"], jnp.float32)
-                       for r in group])
+            np.stack([np.asarray(traces[r.seed]["arrival_ms"], np.float32)
+                      for r in padded])
             if open_loop else None
         )
         knobs = policies.RunKnobs(
-            r1=jnp.asarray([r.r1 for r in group], jnp.int32),
-            r2_override=jnp.asarray([r.r2_override for r in group], jnp.int32),
-            initial_pe=jnp.asarray([r.initial_pe for r in group], jnp.int32),
+            r1=np.asarray([r.r1 for r in padded], np.int32),
+            r2_override=np.asarray([r.r2_override for r in padded], np.int32),
+            initial_pe=np.asarray([r.initial_pe for r in padded], np.int32),
             arrival_scale=(
-                jnp.asarray([r.arrival_scale for r in group], jnp.float32)
+                np.asarray([r.arrival_scale for r in padded], np.float32)
                 if open_loop else None
             ),
         )
         if verbose:
+            where = (f"sharded over {len(devs)} devices"
+                     f" (+{n_pad} pad)" if devs is not None else "one device")
             print(f"# sweep group policy={geometry.POLICY_NAMES[pol]}: "
-                  f"{len(group)} runs in one jit", flush=True)
-        states = _sweep_jit(cfg, lpns, ops, has_writes, knobs, arr)
-        for i, r in enumerate(group):
-            m = engine.summarize(_take_run(states, i), cfg, threads=threads)
+                  f"{len(group)} runs in one jit, {where}", flush=True)
+        if mesh is None:
+            states = _sweep_jit(cfg, lpns, ops, has_writes, knobs, arr)
+        else:
+            place = lambda x: jax.device_put(x, run_sharding)  # noqa: E731
+            lpns, ops = place(lpns), place(ops)
+            arr = place(arr) if arr is not None else None
+            knobs = jax.tree_util.tree_map(place, knobs)
+            states = _sweep_sharded_jit(cfg, lpns, ops, has_writes, knobs,
+                                        arr, mesh)
+        pending.append((group, cfg, states))
+
+    # ---- phase 2: one batched device->host transfer per group, then
+    # summarize on numpy leaves off the dispatch critical path ----
+    results = []
+    for group, cfg, states in pending:
+        host = jax.device_get(states)  # blocks on this group only
+        for i, r in enumerate(group):  # pads (indices >= len(group)) dropped
+            m = engine.summarize(_take_run(host, i), cfg, threads=threads)
             m["run"] = dict(
                 scenario=r.scenario,
                 policy=geometry.POLICY_NAMES[r.policy],

@@ -1,0 +1,24 @@
+"""Pre-jax host-device helpers.
+
+This module must import nothing that touches jax: its whole point is to
+mutate ``XLA_FLAGS`` *before* the first jax import, which is the only time
+``--xla_force_host_platform_device_count`` is honored. Shared by the CLI
+entry points that offer ``--fake-devices`` (``benchmarks/sweep_bench.py``,
+``examples/sweep_experiments.py``).
+"""
+
+from __future__ import annotations
+
+import os
+
+
+def fake_host_devices(n: int | None) -> None:
+    """Make the CPU backend present ``n`` host devices (no-op for falsy
+    ``n``). Call before anything imports jax; appending wins over an earlier
+    ``--xla_force_host_platform_device_count`` in ``XLA_FLAGS`` because XLA
+    resolves duplicate flags last-wins."""
+    if n:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={int(n)}"
+        ).strip()

@@ -542,12 +542,12 @@ def summarize(s: st.SSDState, cfg: geometry.SimConfig, threads: int = 4):
     n_reads = float(s.n_reads)
     # under the open-loop model elapsed time is the last LUN-availability
     # clock (includes idle gaps); closed-loop lun_avail_ms stays 0 so the
-    # busy-time makespan is unchanged
+    # busy-time makespan is unchanged. Host-side numpy on purpose: the sweep
+    # runner hands this function device_get'ed numpy leaves and summarize
+    # must not enqueue device work behind them (DESIGN.md §7.3).
     makespan_ms = float(
-        jnp.maximum(
-            jnp.maximum(s.lun_busy_ms.max(), s.chan_busy_ms.max()),
-            s.lun_avail_ms.max(),
-        )
+        max(np.max(s.lun_busy_ms), np.max(s.chan_busy_ms),
+            np.max(s.lun_avail_ms))
     )
     mean_lat_ms = float(s.svc_sum_ms) / max(n_reads, 1.0)
     if threads == 1:
@@ -556,7 +556,7 @@ def summarize(s: st.SSDState, cfg: geometry.SimConfig, threads: int = 4):
         iops = 1000.0 / mean_lat_ms if mean_lat_ms > 0 else 0.0
     else:
         iops = n_reads / max(makespan_ms / 1000.0, 1e-9)
-    cap = float(st.capacity_gib(s, cfg))
+    cap = float(st.capacity_gib(s, cfg, xp=np))
     init_cap = cfg.n_blocks * cfg.slots_per_block * cfg.page_bytes / 2**30
     pct = telemetry.percentiles(s.lat_hist)
     wpct = telemetry.percentiles(s.w_lat_hist)

@@ -142,12 +142,18 @@ def init_state(cfg: geometry.SimConfig, initial_pe=None) -> SSDState:
     )
 
 
-def usable_capacity_pages(state: SSDState, cfg: geometry.SimConfig):
+def usable_capacity_pages(state: SSDState, cfg: geometry.SimConfig, xp=jnp):
     """Usable capacity in pages: non-free blocks count at their current
     mode's page count; free blocks count at QLC density (they can be opened
-    in any mode, so their capacity potential is the dense one)."""
-    ppb = geometry.pages_per_block(cfg)
-    per_block = jnp.where(
+    in any mode, so their capacity potential is the dense one).
+
+    ``xp=numpy`` computes on the host (``pages_per_block_host`` rounds
+    identically) so ``engine.summarize`` can run on device_get'ed numpy
+    leaves without enqueueing device work (DESIGN.md §7.3); the default
+    stays traceable for the in-jit ChunkMetrics use."""
+    ppb = (geometry.pages_per_block(cfg) if xp is jnp
+           else geometry.pages_per_block_host(cfg))
+    per_block = xp.where(
         state.block_state == FREE,
         ppb[modes.QLC],
         ppb[state.block_mode],
@@ -155,6 +161,7 @@ def usable_capacity_pages(state: SSDState, cfg: geometry.SimConfig):
     return per_block.sum()
 
 
-def capacity_gib(state: SSDState, cfg: geometry.SimConfig):
+def capacity_gib(state: SSDState, cfg: geometry.SimConfig, xp=jnp):
     # float cast first: pages * page_bytes overflows int32 at real geometry
-    return usable_capacity_pages(state, cfg).astype(jnp.float32) * cfg.page_bytes / 2**30
+    return (usable_capacity_pages(state, cfg, xp).astype(xp.float32)
+            * cfg.page_bytes / 2**30)

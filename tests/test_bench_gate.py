@@ -1,0 +1,128 @@
+"""Unit tests for the CI benchmark regression gate
+(benchmarks/check_regression.py): it must demonstrably fail on a large
+artificial slowdown, pass on the real baseline, and never silently compare
+nothing."""
+
+import json
+
+import pytest
+
+from benchmarks.check_regression import gate, main, render_markdown
+
+
+def _doc(read_only=4_900.0, mixed=3_340.0):
+    return {
+        "bench": "engine",
+        "rows": [
+            ["engine/read_only/compile_s", 4.0, "s"],
+            ["engine/read_only/chunks_per_sec", read_only, "chunks/s"],
+            ["engine/mixed/chunks_per_sec", mixed, "chunks/s"],
+        ],
+    }
+
+
+class TestGateFunction:
+    def test_passes_on_baseline(self):
+        entries = gate(_doc(), _doc())
+        assert [e[4] for e in entries] == ["OK", "OK"]
+        assert all(e[3] == 1.0 for e in entries)
+
+    def test_fails_on_10x_slowdown(self):
+        entries = gate(_doc(read_only=490.0, mixed=334.0), _doc())
+        assert [e[4] for e in entries] == ["FAIL", "FAIL"]
+
+    def test_warn_band_does_not_fail(self):
+        # 0.7x: inside [fail_below, warn_below) -> WARN, and main() exits 0
+        entries = gate(_doc(read_only=4_900 * 0.7, mixed=3_340 * 0.7), _doc())
+        assert [e[4] for e in entries] == ["WARN", "WARN"]
+
+    def test_speedups_are_ok(self):
+        entries = gate(_doc(read_only=49_000.0, mixed=33_400.0), _doc())
+        assert [e[4] for e in entries] == ["OK", "OK"]
+
+    def test_no_common_rows_raises(self):
+        with pytest.raises(ValueError, match="no common rows"):
+            gate(_doc(), {"rows": [["other/metric/chunks_per_sec2", 1.0, "x"]]})
+
+    def test_vanished_measured_row_raises(self):
+        # a guarded section dropping out of the fresh artifact must not pass
+        measured = _doc()
+        measured["rows"] = [r for r in measured["rows"] if "mixed" not in r[0]]
+        with pytest.raises(ValueError, match="missing from the measured"):
+            gate(measured, _doc())
+
+    def test_new_measured_rows_without_baseline_ok(self):
+        # the reverse is fine: new metrics may not have a baseline yet
+        measured = _doc()
+        measured["rows"].append(["engine/new_path/chunks_per_sec", 9.9, "chunks/s"])
+        entries = gate(measured, _doc())
+        assert [e[4] for e in entries] == ["OK", "OK"]
+
+    def test_only_suffix_rows_compared(self):
+        entries = gate(_doc(), _doc())
+        names = [e[0] for e in entries]
+        assert all(n.endswith("/chunks_per_sec") for n in names)
+        assert not any("compile_s" in n for n in names)
+
+
+class TestGateMain:
+    def _write(self, tmp_path, name, doc):
+        p = tmp_path / name
+        p.write_text(json.dumps(doc))
+        return str(p)
+
+    def test_exit_codes(self, tmp_path, monkeypatch):
+        monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+        base = self._write(tmp_path, "base.json", _doc())
+        good = self._write(tmp_path, "good.json", _doc())
+        slow = self._write(
+            tmp_path, "slow.json", _doc(read_only=490.0, mixed=334.0)
+        )
+        assert main(["--measured", good, "--baseline", base]) == 0
+        assert main(["--measured", slow, "--baseline", base]) == 1
+
+    def test_baseline_key_selects_subdoc(self, tmp_path, monkeypatch):
+        monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+        # top-level rows are a different (full) geometry: comparing against
+        # them would fail; the tiny_baseline sub-doc must be used instead
+        base = self._write(
+            tmp_path, "base.json",
+            {"rows": _doc(read_only=490.0, mixed=334.0)["rows"],
+             "tiny_baseline": _doc()},
+        )
+        measured = self._write(tmp_path, "m.json", _doc())
+        assert main(["--measured", measured, "--baseline", base,
+                     "--baseline-key", "tiny_baseline"]) == 0
+        assert main(["--measured", measured, "--baseline", base,
+                     "--baseline-key", "missing"]) == 2
+
+    def test_summary_table_written(self, tmp_path, monkeypatch):
+        monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+        base = self._write(tmp_path, "base.json", _doc())
+        slow = self._write(
+            tmp_path, "slow.json", _doc(read_only=490.0, mixed=3_340.0)
+        )
+        summary = tmp_path / "summary.md"
+        main(["--measured", slow, "--baseline", base,
+              "--summary", str(summary)])
+        text = summary.read_text()
+        assert "engine/read_only/chunks_per_sec" in text
+        assert "FAIL" in text and "OK" in text
+
+    def test_committed_baseline_has_tiny_key(self):
+        """The CI gate command points at benchmarks/BENCH_engine.json with
+        --baseline-key tiny_baseline; that key must exist and carry
+        chunks/s rows, or the gate dies at runtime."""
+        from pathlib import Path
+
+        doc = json.loads(
+            (Path(__file__).parent.parent / "benchmarks" /
+             "BENCH_engine.json").read_text()
+        )
+        rows = doc["tiny_baseline"]["rows"]
+        assert doc["tiny_baseline"]["config"]["tiny"] is True
+        assert sum(r[0].endswith("/chunks_per_sec") for r in rows) == 2
+
+    def test_markdown_render(self):
+        md = render_markdown(gate(_doc(), _doc()), 0.5, 0.8)
+        assert md.count("|") > 8 and "ratio" in md
