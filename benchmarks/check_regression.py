@@ -40,13 +40,27 @@ def rows_to_metrics(doc: dict, suffix: str) -> dict[str, float]:
 
 
 def gate(measured_doc: dict, baseline_doc: dict, fail_below: float = FAIL_BELOW,
-         warn_below: float = WARN_BELOW, suffix: str = SUFFIX):
+         warn_below: float = WARN_BELOW, suffix: str = SUFFIX,
+         require: tuple[str, ...] = ()):
     """Compare matching metric rows. Returns a list of
     ``(name, measured, baseline, ratio, status)`` with status in
     OK/WARN/FAIL. Raises if the docs share no comparable rows — a gate that
-    compares nothing must not pass silently."""
+    compares nothing must not pass silently — or if a ``require``'d metric
+    (a named member of the guarded set, e.g. the gc_pressure section) is
+    absent from either side."""
     measured = rows_to_metrics(measured_doc, suffix)
     baseline = rows_to_metrics(baseline_doc, suffix)
+    for name in require:
+        if not name.endswith(suffix):
+            raise ValueError(
+                f"required metric {name!r} does not end with the compared "
+                f"suffix {suffix!r}; the gate would never see it"
+            )
+        if name not in measured or name not in baseline:
+            raise ValueError(
+                f"required metric {name!r} missing from "
+                f"{'measured' if name not in measured else 'baseline'} artifact"
+            )
     common = sorted(set(measured) & set(baseline))
     if not common:
         raise ValueError(
@@ -103,6 +117,9 @@ def main(argv=None) -> int:
     ap.add_argument("--summary", default=None, metavar="PATH",
                     help="append the markdown table here "
                          "(default: $GITHUB_STEP_SUMMARY when set)")
+    ap.add_argument("--require", action="append", default=[], metavar="NAME",
+                    help="fail unless this metric row is present in both "
+                         "artifacts (repeatable; pins the guarded set)")
     args = ap.parse_args(argv)
 
     measured_doc = json.loads(Path(args.measured).read_text())
@@ -116,7 +133,7 @@ def main(argv=None) -> int:
             return 2
 
     entries = gate(measured_doc, baseline_doc, args.fail_below,
-                   args.warn_below, args.suffix)
+                   args.warn_below, args.suffix, require=tuple(args.require))
 
     for name, m, b, ratio, status in entries:
         print(f"{status:4s} {name}: {m:,.1f} vs baseline {b:,.1f} "

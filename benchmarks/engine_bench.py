@@ -1,11 +1,14 @@
 """Engine-throughput benchmark (DESIGN.md §2A): chunks/sec for the simulator
-hot path, measured separately for read-only and mixed read/write traces.
+hot path, measured for read-only, mixed read/write, and GC-pressure traces.
 
 The paper's headline figures (13-18) come from mixed traces, so this script
-is the regression guard for the vectorized write path and the fused reclaim
-pass: it reports steady-state chunks/sec and wall-clock per chunk (compile
-excluded, measured separately) and emits a ``BENCH_engine.json`` artifact in
-the same ``name,value,unit`` row format as the rest of the harness.
+is the regression guard for the vectorized write path, the fused reclaim
+pass, and the fused multi-victim GC (the ``gc_pressure`` section runs a
+write-heavy trace against a nearly-full device so GC fires on virtually
+every chunk): it reports steady-state chunks/sec and wall-clock per chunk
+(compile excluded, measured separately) and emits a ``BENCH_engine.json``
+artifact in the same ``name,value,unit`` row format as the rest of the
+harness.
 
   PYTHONPATH=src python -m benchmarks.engine_bench [--tiny] [--repeats N]
       [--out DIR]
@@ -23,6 +26,11 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+
+# gc_pressure workload shape — single source of truth for the trace builder
+# in _sections and the provenance dict emitted into BENCH_engine.json
+GC_PRESSURE_READ_FRAC = 0.1
+GC_PRESSURE_WRITE_THETA = 2.0
 
 
 def bench_config(tiny: bool):
@@ -43,21 +51,71 @@ def bench_config(tiny: bool):
     )
 
 
-def _traces(cfg, n_requests: int):
+def gc_pressure_config(tiny: bool):
+    """Geometry for the ``gc_pressure`` section: the working set covers
+    almost the whole device (a handful of free blocks) and the GC watermark
+    sits above the free-pool guard, so the single-victim reference must fire
+    on virtually every chunk just to keep up with the write rate (~1 block
+    consumed per chunk), while the fused pass amortizes the same relocation
+    work over one firing per ``gc_victims_per_pass`` chunks. BASELINE policy
+    isolates GC: no conversion/reclaim churn competes for the free pool (a
+    nearly-full device under RARO sits below the reclaim watermark by
+    construction, which would drown the GC signal in demotion work)."""
+    from repro.ssdsim import geometry
+
+    if tiny:
+        # 64 blocks: 46 used, 18 free == the watermark, so the 4-chunk CI
+        # smoke reaches GC pressure immediately (guard floor for k=4 is 8+2)
+        return geometry.tiny_config(
+            policy=geometry.BASELINE, initial_pe=500,
+            n_logical=2_944, gc_free_threshold=18, gc_victims_per_pass=4,
+        )
+    # 256 blocks: 224 used, 32 free; up to k=8 victims per firing (floor
+    # 12+2). chunk=256 keeps the per-chunk base cost small relative to the
+    # every-chunk single-victim GC dispatch the section is measuring.
+    return geometry.SimConfig(
+        blocks_per_plane=64,
+        slots_per_block=256,
+        n_logical=57_344,
+        chunk=256,
+        migrate_pages_per_chunk=64,
+        max_conversions_per_chunk=4,
+        gc_free_threshold=24,
+        gc_victims_per_pass=8,
+        policy=geometry.BASELINE,
+        initial_pe=500,
+    )
+
+
+def _sections(tiny: bool, n_requests: int):
+    """name -> (cfg, trace, has_writes). ``gc_pressure`` runs a write-heavy
+    mixed trace with Zipf-skewed overwrites (concentrated invalidation makes
+    worthwhile GC victims) against the small-free-pool geometry."""
     from repro.ssdsim import workload
 
+    cfg = bench_config(tiny)
+    gc_cfg = gc_pressure_config(tiny)
     return {
-        "read_only": (workload.zipf_read_trace(cfg, n_requests, 1.2, seed=1), False),
-        "mixed": (workload.mixed_trace(cfg, n_requests, 1.2, read_frac=0.7, seed=1), True),
+        "read_only": (
+            cfg, workload.zipf_read_trace(cfg, n_requests, 1.2, seed=1), False),
+        "mixed": (
+            cfg, workload.mixed_trace(cfg, n_requests, 1.2, read_frac=0.7, seed=1),
+            True),
+        "gc_pressure": (
+            gc_cfg,
+            workload.mixed_trace(gc_cfg, n_requests, 1.2, seed=1,
+                                 read_frac=GC_PRESSURE_READ_FRAC,
+                                 write_theta=GC_PRESSURE_WRITE_THETA),
+            True),
     }
 
 
-def bench_engine(cfg, n_requests: int, repeats: int):
+def bench_engine(tiny: bool, n_requests: int, repeats: int):
     """Yield (name, value, unit) rows; compile time via AOT lower/compile so
     the steady-state timing loop never pays tracing cost."""
     from repro.ssdsim import engine
 
-    for wl, (trace, has_writes) in _traces(cfg, n_requests).items():
+    for wl, (cfg, trace, has_writes) in _sections(tiny, n_requests).items():
         lpns = jnp.asarray(trace["lpn"], jnp.int32)
         ops = jnp.asarray(trace["op"], jnp.int32)
         n_chunks = lpns.shape[0]
@@ -88,11 +146,12 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = bench_config(args.tiny)
+    gc_cfg = gc_pressure_config(args.tiny)
     n_requests = args.requests or (4 * cfg.chunk if args.tiny else 40 * cfg.chunk)
 
     rows = []
     print("name,value,unit")
-    for row in bench_engine(cfg, n_requests, args.repeats):
+    for row in bench_engine(args.tiny, n_requests, args.repeats):
         rows.append(list(row))
         n, v, u = row
         print(f"{n},{v:.4f},{u}", flush=True)
@@ -110,6 +169,13 @@ def main() -> None:
             "policy": cfg.policy,
             "n_requests": n_requests,
             "repeats": args.repeats,
+            "gc_pressure": {
+                "n_logical": gc_cfg.n_logical,
+                "gc_free_threshold": gc_cfg.gc_free_threshold,
+                "gc_victims_per_pass": gc_cfg.gc_victims_per_pass,
+                "read_frac": GC_PRESSURE_READ_FRAC,
+                "write_theta": GC_PRESSURE_WRITE_THETA,
+            },
         },
         "rows": rows,
     }

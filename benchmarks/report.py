@@ -1,0 +1,170 @@
+"""Aggregate the committed ``BENCH_*.json`` artifacts into markdown tables —
+the first cut of the reporting layer (ROADMAP: "nothing plots/aggregates it
+yet").
+
+Three sections, one per artifact family:
+
+- **engine** (``BENCH_engine.json``): chunks/sec per workload section across
+  every measurement key in the artifact (top-level rows, ``tiny_baseline``,
+  plus the committed interleaved A/B records like ``dedup_fix`` /
+  ``gc_fusion`` with their primitive timings);
+- **latency** (``BENCH_latency.json``): the hockey-stick table — offered
+  load vs achieved IOPS and p50/p99 latency per policy curve;
+- **sweep** (``BENCH_sweep.json``): 1-vs-N device scaling rows.
+
+Output goes to stdout and, when ``--summary PATH`` or
+``$GITHUB_STEP_SUMMARY`` is set, is appended there (the CI step renders the
+committed artifacts into the job summary).
+
+  PYTHONPATH=src python -m benchmarks.report [--dir benchmarks] [--summary PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+
+def _fmt(v: float) -> str:
+    return f"{v:,.1f}" if abs(v) >= 10 else f"{v:.3g}"
+
+
+def _rows_by_section(rows, suffix: str) -> dict[str, float]:
+    out = {}
+    for name, value, _unit in rows:
+        if name.endswith(suffix):
+            out[name.split("/")[1]] = float(value)
+    return out
+
+
+def engine_report(doc: dict) -> list[str]:
+    """Throughput trend across the artifact's measurement keys + committed
+    A/B (before/after) records."""
+    keys = {"full geometry": doc}
+    if "tiny_baseline" in doc:
+        keys["tiny (CI gate baseline)"] = doc["tiny_baseline"]
+    sections: list[str] = []
+    for k in keys.values():
+        for s in _rows_by_section(k.get("rows", []), "/chunks_per_sec"):
+            if s not in sections:
+                sections.append(s)
+    lines = [
+        "### Engine throughput (chunks/sec)",
+        "",
+        "| measurement | " + " | ".join(sections) + " |",
+        "|---|" + "---:|" * len(sections),
+    ]
+    for label, sub in keys.items():
+        by = _rows_by_section(sub.get("rows", []), "/chunks_per_sec")
+        lines.append(
+            f"| {label} | "
+            + " | ".join(_fmt(by[s]) if s in by else "—" for s in sections)
+            + " |"
+        )
+    # committed interleaved A/B records (dedup_fix, gc_fusion, ...)
+    for key, rec in doc.items():
+        if not (isinstance(rec, dict) and "change" in rec):
+            continue
+        lines += ["", f"**{key}** — {rec['change']}", ""]
+        ab = {}
+        for k2, v2 in rec.items():
+            if k2.startswith("engine_chunks_per_sec_interleaved_median"):
+                ab.update(v2)
+        if ab:
+            lines += ["| section | before | after | speedup |",
+                      "|---|---:|---:|---:|"]
+            for s, v in ab.items():
+                lines.append(
+                    f"| {s} | {_fmt(v['before'])} | {_fmt(v['after'])} "
+                    f"| {v['after'] / v['before']:.2f}x |"
+                )
+        prim = rec.get("primitive_us_per_call", {})
+        if prim:
+            lines += ["", "| primitive | µs/call |", "|---|---:|"]
+            lines += [f"| {n} | {_fmt(v)} |" for n, v in prim.items()]
+    return lines
+
+
+def latency_report(doc: dict) -> list[str]:
+    """Hockey-stick: offered load vs achieved IOPS / latency per policy."""
+    lines = ["### Latency vs offered load (open loop)"]
+    for policy, c in doc.get("curves", {}).items():
+        lines += [
+            "",
+            f"**{policy}** (closed-loop p99 "
+            f"{_fmt(c.get('closed_p99_us', float('nan')))} µs)",
+            "",
+            "| arrival scale | offered IOPS | achieved IOPS | mean µs "
+            "| p50 µs | p99 µs | queue µs |",
+            "|---:|---:|---:|---:|---:|---:|---:|",
+        ]
+        for i, sc in enumerate(c["arrival_scale"]):
+            lines.append(
+                f"| {sc:g} | {_fmt(c['offered_iops'][i])} "
+                f"| {_fmt(c['iops'][i])} "
+                f"| {_fmt(c['mean_read_latency_us'][i])} "
+                f"| {_fmt(c['read_lat_p50_us'][i])} "
+                f"| {_fmt(c['read_lat_p99_us'][i])} "
+                f"| {_fmt(c['read_queue_delay_us'][i])} |"
+            )
+    return lines
+
+
+def sweep_report(doc: dict) -> list[str]:
+    lines = [
+        "### Sharded sweep scaling",
+        "",
+        "| metric | value | unit |",
+        "|---|---:|---|",
+    ]
+    lines += [f"| `{n}` | {_fmt(float(v))} | {u} |"
+              for n, v, u in doc.get("rows", [])]
+    if doc.get("note"):
+        lines += ["", f"> {doc['note']}"]
+    return lines
+
+
+RENDERERS = {
+    "BENCH_engine.json": engine_report,
+    "BENCH_latency.json": latency_report,
+    "BENCH_sweep.json": sweep_report,
+}
+
+
+def render(bench_dir: Path) -> str:
+    parts = ["## Benchmark artifacts", ""]
+    found = False
+    for fname, fn in RENDERERS.items():
+        p = bench_dir / fname
+        if not p.exists():
+            continue
+        found = True
+        parts += fn(json.loads(p.read_text())) + [""]
+    if not found:
+        raise FileNotFoundError(f"no BENCH_*.json artifacts under {bench_dir}")
+    return "\n".join(parts)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks", metavar="DIR",
+                    help="directory holding the committed BENCH_*.json files")
+    ap.add_argument("--summary", default=None, metavar="PATH",
+                    help="append the markdown here "
+                         "(default: $GITHUB_STEP_SUMMARY when set)")
+    args = ap.parse_args(argv)
+
+    md = render(Path(args.dir))
+    print(md)
+    summary = args.summary or os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(md + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

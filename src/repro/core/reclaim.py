@@ -65,6 +65,21 @@ def select_demotions(block_mode, block_heat, cold_age, free_frac, cfg: ReclaimCo
     return mask, target
 
 
+def topk_victims(scores, eligible, k: int):
+    """Shared top-k victim lane selection for the fused background-FTL
+    passes (reclaim demotion and multi-victim GC): one ``lax.top_k`` over
+    ``eligible``-masked float scores.
+
+    Returns ``(victims, ok)``: ``k`` block ids ordered best-candidate-first
+    (ties break to the lowest block id, matching a sequential greedy argmax)
+    and a validity lane mask — a lane is dead when fewer than ``k`` blocks
+    are eligible.
+    """
+    masked = jnp.where(eligible, jnp.asarray(scores, jnp.float32), -jnp.inf)
+    vals, victims = jax.lax.top_k(masked, k)
+    return victims.astype(jnp.int32), vals > -jnp.inf
+
+
 def select_demotion_victims(block_mode, block_heat, cold_age, free_frac,
                             cfg: ReclaimConfig):
     """Fused victim selection for the engine hot path: one ``lax.top_k``
@@ -80,8 +95,6 @@ def select_demotion_victims(block_mode, block_heat, cold_age, free_frac,
     under_pressure = jnp.asarray(free_frac) < cfg.low_watermark
 
     k = min(cfg.max_per_pass, block_mode.shape[-1])
-    masked = jnp.where(eligible & under_pressure, scores, -jnp.inf)
-    vals, victims = jax.lax.top_k(masked, k)
-    ok = vals > -jnp.inf
+    victims, ok = topk_victims(scores, eligible & under_pressure, k)
     target = jnp.minimum(jnp.asarray(block_mode, jnp.int32)[victims] + 1, modes.QLC)
-    return victims.astype(jnp.int32), ok, target
+    return victims, ok, target

@@ -6,7 +6,10 @@ through the batched write path (per-LUN prefix sums + masked scatters; the
 sequential scan survives only as the test reference), then the policy's
 per-read trigger pipeline runs on the chunk's unique read set and
 conversions/reclaim/GC execute as pressure-gated background FTL tasks,
-exactly like FEMU's background loop between request bursts.
+exactly like FEMU's background loop between request bursts. All block
+relocation — multi-victim GC (up to ``cfg.gc_victims_per_pass`` per
+firing), reclaim demotion and conversion — runs through the one fused
+``ftl.relocate_group`` kernel (DESIGN.md §2A).
 
 Two timing models share the engine (DESIGN.md §2C):
 
@@ -462,7 +465,7 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
                 free_frac < rcfg.low_watermark, _reclaim_pass, lambda s_: s_, s
             )
 
-    # ---------------- GC ----------------
+    # ---------------- GC (fused multi-victim, deficit-aware) ----------------
     s = ftl.gc_step(s, cfg)
 
     # clock follows the busiest LUN (device saturated under FIO load)

@@ -1,18 +1,28 @@
 """FTL mechanics: block allocation, block-granularity migration/conversion
-(paper Fig. 8-10), greedy GC, fused reclaim demotion. Everything is jit-safe
-with static shapes; per-block operations work on the block's fixed
-slots_per_block window.
+(paper Fig. 8-10), fused multi-victim GC, fused reclaim demotion. Everything
+is jit-safe with static shapes; per-block operations work on the block's
+fixed slots_per_block window.
+
+Background block relocation — GC relocation, reclaim demotion and block
+conversion — is ONE code path (DESIGN.md §2A): :func:`relocate_group`
+gathers the victims' valid pages, books their Eq.-3 read cost, places them
+through the shared :func:`_place_pages` core and erases every victim in one
+vectorized :func:`_erase_many`. The original scalar single-victim path
+survives only as ``gc_pass_reference`` / ``_migrate_block_reference`` (the
+behavioral reference for the bit-identity tests, like
+``engine.write_path_reference``).
 
 Scatter discipline: masked-out lanes are redirected to an out-of-range index
 and dropped (``mode='drop'``) — never write a dummy in-range index, because
 duplicate-index ``set`` conflicts are unordered in XLA.
 
 Free-pool bookkeeping (DESIGN.md §2A): ``SSDState.free_count`` is the exact
-number of FREE blocks, incremented by ``_erase`` and decremented at the two
-places a FREE block is opened (``_place_pages`` and the engine write path).
-``SSDState.free_hint`` holds one candidate free block per LUN, refreshed on
-erase; ``alloc_free_block`` trusts a hint only after re-checking
-``block_state`` and falls back to the O(n_blocks) scan when no hint is live.
+number of FREE blocks, incremented per erased victim by ``_erase_many`` and
+decremented at the two places a FREE block is opened (``_place_pages`` and
+the engine write path). ``SSDState.free_hint`` holds one candidate free
+block per LUN, refreshed on erase; ``alloc_free_block`` trusts a hint only
+after re-checking ``block_state`` and falls back to the O(n_blocks) scan
+when no hint is live.
 """
 
 from __future__ import annotations
@@ -21,7 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import modes, retry
+from repro.core import modes, reclaim, retry
 from repro.ssdsim import geometry, state as st
 
 # Max destination blocks one conversion can need: one partially-filled open
@@ -71,8 +81,62 @@ def free_block_count(s: st.SSDState):
     return s.free_count
 
 
+def _erase_many(s: st.SSDState, victims, grp, cfg: geometry.SimConfig):
+    """Erase every ``grp``-masked victim block in one vectorized pass:
+    masked per-victim slot-window clears for ``p2l``, masked per-block
+    scatters reset the block metadata, a ``segment_sum`` books per-LUN
+    erase latency, and a per-LUN "any erased block" reduction refreshes
+    ``free_hint``.
+
+    The single production erase primitive (GC, reclaim and conversion all
+    reach it through :func:`relocate_group`); bit-identical to the scalar
+    ``_erase`` reference for a single victim, and ~2x cheaper than the K
+    sequential ``lax.cond(_erase)`` scatters it replaced. The ``p2l`` clear
+    is a static unroll of masked ``dynamic_update_slice`` windows rather
+    than one K*spb-index scatter: each victim's slots are contiguous, and
+    on XLA:CPU a slice memcpy beats the general per-element scatter by ~4x
+    (a masked-out lane writes its current window back, a no-op).
+    """
+    spb = cfg.slots_per_block
+    B = s.block_mode.shape[0]
+    vb = jnp.maximum(victims, 0)
+    bdrop = jnp.where(grp, vb, B)  # B = out of range -> dropped
+    p2l = s.p2l
+    neg = jnp.full((spb,), -1, jnp.int32)
+    for i in range(victims.shape[0]):
+        cur = lax.dynamic_slice(p2l, (vb[i] * spb,), (spb,))
+        p2l = lax.dynamic_update_slice(
+            p2l, jnp.where(grp[i], neg, cur), (vb[i] * spb,)
+        )
+    lun = vb % cfg.n_luns
+    erase_ms = jnp.where(grp, modes.ERASE_LATENCY_US[s.block_mode[vb]] / 1000.0, 0.0)
+    lun_erase = jax.ops.segment_sum(erase_ms, lun, num_segments=cfg.n_luns)
+    # any erased block on the LUN is a valid allocation hint; take the max id
+    hint_cand = jax.ops.segment_max(
+        jnp.where(grp, vb, -1), lun, num_segments=cfg.n_luns
+    )
+    n = grp.sum().astype(jnp.int32)
+    return s._replace(
+        p2l=p2l,
+        block_pe=s.block_pe.at[bdrop].add(1, mode="drop"),
+        block_reads=s.block_reads.at[bdrop].set(0, mode="drop"),
+        block_state=s.block_state.at[bdrop].set(st.FREE, mode="drop"),
+        block_next=s.block_next.at[bdrop].set(0, mode="drop"),
+        block_valid=s.block_valid.at[bdrop].set(0, mode="drop"),
+        block_cold_age=s.block_cold_age.at[bdrop].set(0, mode="drop"),
+        free_count=s.free_count + n,
+        free_hint=jnp.where(hint_cand >= 0, hint_cand.astype(jnp.int32), s.free_hint),
+        lun_busy_ms=s.lun_busy_ms + lun_erase,
+        n_erases=s.n_erases + n.astype(jnp.float32),
+    )
+
+
 def _erase(s: st.SSDState, blk, cfg: geometry.SimConfig):
-    """Erase ``blk``: invalidate slots, bump P/E, return to free pool."""
+    """Erase ``blk``: invalidate slots, bump P/E, return to free pool.
+
+    Reference-only (the sequential half of ``_migrate_block_reference``);
+    production relocation erases through :func:`_erase_many`.
+    """
     spb = cfg.slots_per_block
     mode = s.block_mode[blk]
     p2l = lax.dynamic_update_slice(s.p2l, jnp.full((spb,), -1, jnp.int32), (blk * spb,))
@@ -98,10 +162,17 @@ def _place_pages(s: st.SSDState, lpns, valid, tgt_mode, cfg: geometry.SimConfig,
     """Append the ``valid``-masked ``lpns`` into open migration block(s) of
     ``tgt_mode``, opening up to ``n_dest`` fresh blocks from the free pool.
 
-    Shared placement core of page migration, block migration and the fused
-    reclaim pass — besides the engine write path this is the only place FREE
-    blocks are consumed, so the free-pool bookkeeping lives here once.
-    Callers invalidate (or erase) the source slots themselves.
+    Shared placement core of page migration and the fused relocation kernel
+    — besides the engine write path this is the only place FREE blocks are
+    consumed, so the free-pool bookkeeping lives here once. Callers
+    invalidate (or erase) the source slots themselves.
+
+    The ``n_dest`` unroll carries only scalar per-block bookkeeping
+    (allocation, block_next/valid/state, busy time) and accumulates each
+    lane's destination slot; every lane is placed in exactly one iteration,
+    so the expensive full-array scatters (l2p/p2l/page timestamps) happen
+    once after the loop instead of once per destination — the unroll cost
+    no longer scales with the lane count.
     """
     spb = cfg.slots_per_block
     ppb = geometry.pages_per_block(cfg)
@@ -111,64 +182,68 @@ def _place_pages(s: st.SSDState, lpns, valid, tgt_mode, cfg: geometry.SimConfig,
     pos = jnp.cumsum(valid.astype(jnp.int32)) - 1  # rank of each valid page
     n_valid = valid.sum()
     consumed = jnp.int32(0)
+    dest_slot = jnp.full(lpns.shape, S, jnp.int32)  # S = dropped
     for _ in range(n_dest):
         cur = s.open_mig[tgt_mode]
         fresh = cur < 0
         a = alloc_free_block(s)
         d = jnp.where(fresh, a, cur)
         dd = jnp.maximum(d, 0)  # safe index; all writes masked when d < 0
-        usable = jnp.where(d >= 0, ppb[tgt_mode] - s.block_next[dd], 0)
+        start = s.block_next[dd]
+        usable = jnp.where(d >= 0, ppb[tgt_mode] - start, 0)
         take = jnp.clip(n_valid - consumed, 0, usable)
         opened = (take > 0) & (d >= 0)
         sel = valid & (pos >= consumed) & (pos < consumed + take) & opened
+        dest_slot = jnp.where(sel, dd * spb + start + (pos - consumed), dest_slot)
 
-        dest_off = s.block_next[dd] + (pos - consumed)
-        dest_slot = jnp.where(sel, dd * spb + dest_off, S)  # S = dropped
-        lp_idx = jnp.where(sel, lpns, L)  # L = dropped
-
+        write_ms = take * modes.WRITE_LATENCY_US[tgt_mode] / 1000.0
+        is_full = start + take >= ppb[tgt_mode]
         s = s._replace(
             block_mode=s.block_mode.at[dd].set(
                 jnp.where(opened, tgt_mode, s.block_mode[dd])
             ),
             block_state=s.block_state.at[dd].set(
-                jnp.where(opened, st.OPEN, s.block_state[dd])
+                jnp.where(opened, jnp.where(is_full, st.FULL, st.OPEN),
+                          s.block_state[dd])
             ),
             free_count=s.free_count - jnp.where(opened & fresh, 1, 0),
-        )
-        l2p = s.l2p.at[lp_idx].set(dest_slot, mode="drop")
-        p2l = s.p2l.at[dest_slot].set(lp_safe, mode="drop")
-        pwt = s.page_write_ms.at[dest_slot].set(s.clock_ms, mode="drop")
-
-        write_ms = take * modes.WRITE_LATENCY_US[tgt_mode] / 1000.0
-        new_next = s.block_next[dd] + take
-        is_full = new_next >= ppb[tgt_mode]
-        s = s._replace(
-            l2p=l2p,
-            p2l=p2l,
-            page_write_ms=pwt,
             block_next=s.block_next.at[dd].add(jnp.where(opened, take, 0)),
             block_valid=s.block_valid.at[dd].add(jnp.where(opened, take, 0)),
-            block_state=s.block_state.at[dd].set(
-                jnp.where(opened & is_full, st.FULL, s.block_state.at[dd].get())
-            ),
             open_mig=s.open_mig.at[tgt_mode].set(
                 jnp.where(opened, jnp.where(is_full, -1, d), s.open_mig[tgt_mode])
             ),
             lun_busy_ms=s.lun_busy_ms.at[dd % cfg.n_luns].add(write_ms),
         )
         consumed = consumed + take
-    return s
+    placed = dest_slot < S
+    lp_idx = jnp.where(placed, lpns, L)  # L = dropped
+    return s._replace(
+        l2p=s.l2p.at[lp_idx].set(dest_slot, mode="drop"),
+        p2l=s.p2l.at[dest_slot].set(lp_safe, mode="drop"),
+        page_write_ms=s.page_write_ms.at[dest_slot].set(s.clock_ms, mode="drop"),
+    )
 
 
 def migrate_block(s: st.SSDState, src, tgt_mode, cfg: geometry.SimConfig):
     """Move all valid pages of ``src`` into open migration block(s) of
     ``tgt_mode``, then erase ``src``. This is both mode conversion
-    (tgt != src mode) and GC relocation (tgt == src mode).
+    (tgt != src mode) and GC relocation (tgt == src mode) — a K=1 call into
+    the fused :func:`relocate_group` kernel.
 
     Latency accounting: each valid page costs one source-mode read (with its
     Eq.-3 retry count) plus one target-mode program; the erase costs the
     source-mode erase latency. Requires up to MAX_DEST destination blocks;
     the caller guards on free_block_count.
+    """
+    victims = jnp.asarray(src, jnp.int32).reshape((1,))
+    return relocate_group(s, victims, jnp.ones((1,), bool), tgt_mode, cfg, MAX_DEST)
+
+
+def _migrate_block_reference(s: st.SSDState, src, tgt_mode, cfg: geometry.SimConfig):
+    """The original sequential block migration — retained purely as the
+    behavioral reference for the fused-kernel bit-identity tests
+    (``gc_pass_reference`` routes through it); production code uses
+    :func:`migrate_block` / :func:`relocate_group`.
     """
     spb = cfg.slots_per_block
 
@@ -260,20 +335,6 @@ def maybe_migrate_pages(s: st.SSDState, lpns, tgt_mode, cfg: geometry.SimConfig)
     )
 
 
-def maybe_migrate_block(s: st.SSDState, src, tgt_mode, cfg: geometry.SimConfig):
-    """cond-wrapped migration: no-op when src < 0, the free pool cannot
-    cover MAX_DEST destinations, or the block is not FULL (converting a
-    block still being programmed would race the write path)."""
-    ok = (src >= 0) & (free_block_count(s) >= MAX_DEST + 2)
-    ok &= s.block_state[jnp.maximum(src, 0)] == st.FULL
-    return lax.cond(
-        ok,
-        lambda s_: migrate_block(s_, jnp.maximum(src, 0), tgt_mode, cfg),
-        lambda s_: s_,
-        s,
-    )
-
-
 def _demote_dest_unroll(cfg: geometry.SimConfig, tgt_mode: int, n_victims: int) -> int:
     """Destination blocks needed by one fused demotion pass into ``tgt_mode``:
     up to ``n_victims`` source blocks one density level below the target,
@@ -283,12 +344,17 @@ def _demote_dest_unroll(cfg: geometry.SimConfig, tgt_mode: int, n_victims: int) 
     return -(-src_pages // int(ppb[tgt_mode])) + 1
 
 
-def _demote_group(s: st.SSDState, victims, grp, tgt_mode: int,
-                  cfg: geometry.SimConfig):
-    """Migrate every ``grp``-masked victim block into ``tgt_mode`` in one
-    placement pass, then erase the victims. The fused replacement for K
-    sequential ``migrate_block`` calls (DESIGN.md §2A)."""
-    K = victims.shape[0]
+def relocate_group(s: st.SSDState, victims, grp, tgt_mode,
+                   cfg: geometry.SimConfig, n_dest: int):
+    """The fused relocation kernel (DESIGN.md §2A): migrate every
+    ``grp``-masked victim block into ``tgt_mode`` in one placement pass,
+    then erase all victims in one vectorized :func:`_erase_many`.
+
+    GC relocation (tgt == victim mode), reclaim demotion (one call per
+    demotion target) and block conversion (:func:`migrate_block`, K=1) are
+    all this kernel with different victim sets; ``n_dest`` is the caller's
+    static bound on destination blocks one pass can open.
+    """
     spb = cfg.slots_per_block
 
     vb = jnp.maximum(victims, 0)
@@ -308,24 +374,14 @@ def _demote_group(s: st.SSDState, victims, grp, tgt_mode: int,
     )
     s = s._replace(lun_busy_ms=s.lun_busy_ms + lun_rd)
 
-    s = _place_pages(
-        s, lpns.reshape(-1), valid.reshape(-1), tgt_mode, cfg,
-        _demote_dest_unroll(cfg, tgt_mode, K),
-    )
+    s = _place_pages(s, lpns.reshape(-1), valid.reshape(-1), tgt_mode, cfg, n_dest)
 
     conv_src = jnp.where(grp, src_mode, modes.N_MODES)  # N_MODES = dropped
     s = s._replace(
         n_migrated_pages=s.n_migrated_pages + valid.sum(),
         n_conversions=s.n_conversions.at[conv_src, tgt_mode].add(1.0, mode="drop"),
     )
-    for i in range(K):
-        s = lax.cond(
-            grp[i],
-            lambda s_, i=i: _erase(s_, vb[i], cfg),
-            lambda s_: s_,
-            s,
-        )
-    return s
+    return _erase_many(s, victims, grp, cfg)
 
 
 def reclaim_victims(s: st.SSDState, victims, v_ok, v_tgt, cfg: geometry.SimConfig):
@@ -340,30 +396,126 @@ def reclaim_victims(s: st.SSDState, victims, v_ok, v_tgt, cfg: geometry.SimConfi
         ok = grp.any() & (free_block_count(s) >= _demote_dest_unroll(cfg, tgt, K) + 2)
         s = lax.cond(
             ok,
-            lambda s_, grp=grp, tgt=tgt: _demote_group(s_, victims, grp, tgt, cfg),
+            lambda s_, grp=grp, tgt=tgt: relocate_group(
+                s_, victims, grp, tgt, cfg, _demote_dest_unroll(cfg, tgt, K)
+            ),
             lambda s_: s_,
             s,
         )
     return s
 
 
+def _gc_dest_need(cfg: geometry.SimConfig, k: int) -> int:
+    """Free-pool guard headroom for a fused GC pass of up to ``k`` victims.
+
+    One same-mode victim needs at most MAX_DEST destinations (the scalar
+    reference's guard, kept so ``gc_victims_per_pass=1`` is bit-identical to
+    it); every further victim fills at most one more fresh block.
+    """
+    return MAX_DEST + (k - 1)
+
+
+def select_gc_victims(s: st.SSDState, cfg: geometry.SimConfig, k: int):
+    """Top-k GC victim selection (same shape as
+    ``reclaim.select_demotion_victims``): among reclaimable FULL blocks —
+    at least one invalid page at their current mode — the ``k`` with the
+    fewest valid pages, ties to the lowest block id. Equals ``k`` sequential
+    greedy argmin picks because relocation never creates a new reclaimable
+    block (placed blocks fill completely valid)."""
+    ppb = geometry.pages_per_block(cfg)
+    reclaimable = (s.block_state == st.FULL) & (s.block_valid < ppb[s.block_mode])
+    return reclaim.topk_victims(-s.block_valid.astype(jnp.float32), reclaimable, k)
+
+
 def gc_step(s: st.SSDState, cfg: geometry.SimConfig):
-    """Greedy GC, cond-gated on the free-pool watermark: with a healthy pool
-    the victim scan is skipped entirely, so GC can never fire above
-    ``cfg.gc_free_threshold``. (The idle branch is an explicit no-op now —
-    it previously still selected a victim and read its mode as the
-    relocation target.)"""
+    """Fused greedy GC, cond-gated on the free-pool watermark: with a
+    healthy pool the victim scan is skipped entirely, so GC can never fire
+    above ``cfg.gc_free_threshold``. Under pressure one firing relocates up
+    to ``cfg.gc_victims_per_pass`` victims through :func:`relocate_group`,
+    amortizing the full-device top-k, the placement unroll and the per-chunk
+    dispatch over k blocks."""
     need = free_block_count(s) < cfg.gc_free_threshold
     return lax.cond(need, lambda s_: _gc_pass(s_, cfg), lambda s_: s_, s)
 
 
 def _gc_pass(s: st.SSDState, cfg: geometry.SimConfig):
-    """Relocate the FULL block with the fewest valid pages (and at least one
-    invalid page); no-op via maybe_migrate_block when nothing is reclaimable."""
+    """One fused GC firing: top-k min-valid victims relocated in a single
+    masked :func:`relocate_group` pass over the batch's dominant source
+    mode (GC keeps each block's mode), cond-gated on having victims and
+    free headroom.
+
+    The batch is deficit-aware (per-victim projected net reclaim
+    ``1 - valid/pages`` from the selection-time counts, prefix-summed
+    best-first): victims are *forced* while the projection is still needed
+    to lift the pool back to ``gc_free_threshold``, and taken
+    *opportunistically* beyond that — up to ``k - 1`` blocks of hysteresis
+    headroom — only when they offer at least half the batch's best
+    projected harvest (i.e. comparably cheap to the victim GC would have
+    picked anyway). One firing then builds enough slack that the following chunks
+    skip GC entirely, amortizing the full-device top-k, the placement
+    unroll and the cond/dispatch overhead over the batch, while valid-heavy
+    victims deep in the ranking are never relocated early (they decay to
+    cheap victims by the time they are actually needed — relocating them
+    now would multiply write amplification, and with a thin invalid
+    inventory the pass degrades gracefully to the reference's
+    one-victim-per-firing behavior). With ``k = 1`` the mask is always
+    true, keeping the pass bit-identical to ``gc_pass_reference``. ``k``
+    victims each with >= 1 invalid page place into at most ``k`` fresh
+    blocks plus the open migration block, so the placement unroll is
+    ``k + 1``."""
+    k = min(max(int(cfg.gc_victims_per_pass), 1), cfg.n_blocks)
+    victims, ok = select_gc_victims(s, cfg, k)
+    vb = jnp.maximum(victims, 0)
+    ppb = geometry.pages_per_block(cfg)
+    vmode = s.block_mode[vb]
+    net = jnp.where(ok, 1.0 - s.block_valid[vb] / ppb[vmode].astype(jnp.float32), 0.0)
+    cum_before = jnp.cumsum(net) - net  # projected reclaim of better victims
+    deficit = (cfg.gc_free_threshold - free_block_count(s)).astype(jnp.float32)
+    forced = cum_before < deficit
+    # opportunistic batching: only victims offering at least half the best
+    # victim's harvest ride along (victims are ordered best-first, so lane 0
+    # holds the batch's best projected net reclaim)
+    cheap = net >= 0.5 * net[0]
+    ok &= forced | (cheap & (cum_before < deficit + (k - 1)))
+    # one relocation pass per firing, on the dominant source mode's victims
+    # (a GC batch is virtually always single-mode — user data lives in QLC;
+    # minority-mode victims simply wait for a later firing)
+    cnt = jax.ops.segment_sum(ok.astype(jnp.int32), vmode, num_segments=modes.N_MODES)
+    tgt = jnp.argmax(cnt).astype(jnp.int32)
+    grp = ok & (vmode == tgt) & (s.block_state[vb] == st.FULL)
+    go = grp.any() & (free_block_count(s) >= _gc_dest_need(cfg, k) + 2)
+    return lax.cond(
+        go,
+        lambda s_: relocate_group(s_, victims, grp, tgt, cfg, k + 1),
+        lambda s_: s_,
+        s,
+    )
+
+
+def gc_step_reference(s: st.SSDState, cfg: geometry.SimConfig):
+    """Watermark-gated wrapper over :func:`gc_pass_reference` (mirrors
+    :func:`gc_step`); reference-only, for the bit-identity tests."""
+    need = free_block_count(s) < cfg.gc_free_threshold
+    return lax.cond(need, lambda s_: gc_pass_reference(s_, cfg), lambda s_: s_, s)
+
+
+def gc_pass_reference(s: st.SSDState, cfg: geometry.SimConfig):
+    """The original scalar single-victim GC pass — argmin victim scan plus
+    one sequential block migration — retained purely as the behavioral
+    reference: the fused :func:`_gc_pass` with ``gc_victims_per_pass=1``
+    must be bit-identical to it (asserted in tier-1)."""
     ppb = geometry.pages_per_block(cfg)
     full = s.block_state == st.FULL
     reclaimable = full & (s.block_valid < ppb[s.block_mode])
     score = jnp.where(reclaimable, s.block_valid, jnp.iinfo(jnp.int32).max)
     victim = jnp.argmin(score).astype(jnp.int32)
     src = jnp.where(reclaimable[victim], victim, -1)
-    return maybe_migrate_block(s, src, s.block_mode[victim], cfg)
+    tgt_mode = s.block_mode[victim]
+    ok = (src >= 0) & (free_block_count(s) >= MAX_DEST + 2)
+    ok &= s.block_state[jnp.maximum(src, 0)] == st.FULL
+    return lax.cond(
+        ok,
+        lambda s_: _migrate_block_reference(s_, jnp.maximum(src, 0), tgt_mode, cfg),
+        lambda s_: s_,
+        s,
+    )

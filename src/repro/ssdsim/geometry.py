@@ -35,6 +35,7 @@ class SimConfig:
     migrate_pages_per_chunk: int = 128  # page-granular conversion budget/mode
     max_conversions_per_chunk: int = 4  # block-granular ops (GC/reclaim)
     gc_free_threshold: int = 8  # min free blocks before GC kicks in
+    gc_victims_per_pass: int = 4  # blocks relocated per fused GC firing
     device_age_h: float = 100.0  # retention baseline (pre-aged device)
     channel_mb_s: float = 800.0  # ONFI channel bandwidth for page transfer
 
@@ -92,6 +93,7 @@ def tiny_config(**kw) -> SimConfig:
         migrate_pages_per_chunk=16,
         max_conversions_per_chunk=2,
         gc_free_threshold=2,
+        gc_victims_per_pass=2,
     )
     base.update(kw)
     return SimConfig(**base)

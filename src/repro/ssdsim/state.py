@@ -142,6 +142,75 @@ def init_state(cfg: geometry.SimConfig, initial_pe=None) -> SSDState:
     )
 
 
+def check_invariants(s: SSDState, cfg: geometry.SimConfig, where: str = "") -> None:
+    """Assert full-state FTL consistency (host-side numpy; test helper).
+
+    Checks the invariants every engine step and every relocation pass must
+    preserve: l2p/p2l mutual consistency (a bijection on mapped pages),
+    ``block_valid`` equal to the per-block recount of valid slots, valid
+    slots confined to each block's programmed window, block metadata in
+    range, exact incremental ``free_count``, free hints on their own LUN
+    (stale hints are legal by design — consumers re-validate against
+    ``block_state`` — but a hint never strays off its LUN or out of range),
+    and open user/migration cursors pointing at OPEN blocks.
+    """
+    import numpy as np
+
+    tag = f" [{where}]" if where else ""
+    spb = cfg.slots_per_block
+    B, L = cfg.n_blocks, cfg.n_logical
+    l2p = np.asarray(s.l2p)
+    p2l = np.asarray(s.p2l)
+
+    # -- mapping bijection --
+    mapped = l2p >= 0
+    assert (l2p[mapped] < cfg.n_slots).all(), f"l2p out of range{tag}"
+    assert (p2l[l2p[mapped]] == np.arange(L)[mapped]).all(), \
+        f"l2p -> p2l mismatch{tag}"
+    vslots = np.nonzero(p2l >= 0)[0]
+    assert (p2l[vslots] < L).all(), f"p2l out of range{tag}"
+    assert (l2p[p2l[vslots]] == vslots).all(), f"p2l -> l2p mismatch{tag}"
+
+    # -- per-block accounting --
+    bv = np.asarray(s.block_valid)
+    counts = np.bincount(vslots // spb, minlength=B)
+    assert (bv == counts).all(), \
+        f"block_valid recount mismatch at {np.nonzero(bv != counts)[0][:8]}{tag}"
+    bm = np.asarray(s.block_mode)
+    bs = np.asarray(s.block_state)
+    bn = np.asarray(s.block_next)
+    assert ((bm >= 0) & (bm < modes.N_MODES)).all(), f"block_mode range{tag}"
+    assert ((bs >= FREE) & (bs <= FULL)).all(), f"block_state range{tag}"
+    ppb = geometry.pages_per_block_host(cfg)
+    nonfree = bs != FREE
+    assert (bn[nonfree] <= ppb[bm[nonfree]]).all(), f"block_next > pages{tag}"
+    assert (bn >= bv).all(), f"valid pages exceed programmed pages{tag}"
+    assert (bn[bs == FREE] == 0).all() and (bv[bs == FREE] == 0).all(), \
+        f"FREE block with programmed/valid pages{tag}"
+    # valid slots sit inside the programmed window of their block
+    assert (vslots % spb < bn[vslots // spb]).all(), \
+        f"valid slot past block_next{tag}"
+
+    # -- free-pool bookkeeping --
+    assert int(s.free_count) == int((bs == FREE).sum()), \
+        f"free_count {int(s.free_count)} != recount {int((bs == FREE).sum())}{tag}"
+    hint = np.asarray(s.free_hint)
+    assert ((hint >= -1) & (hint < B)).all(), f"free_hint range{tag}"
+    live = hint >= 0
+    assert (hint[live] % cfg.n_luns == np.arange(cfg.n_luns)[live]).all(), \
+        f"free_hint off its LUN{tag}"
+
+    # -- allocation cursors --
+    for name, cur in (("open_user", np.asarray(s.open_user)),
+                      ("open_mig", np.asarray(s.open_mig))):
+        openc = cur >= 0
+        assert ((cur >= -1) & (cur < B)).all(), f"{name} range{tag}"
+        assert (bs[cur[openc]] == OPEN).all(), f"{name} -> non-OPEN block{tag}"
+    om = np.asarray(s.open_mig)
+    assert (bm[om[om >= 0]] == np.arange(3)[om >= 0]).all(), \
+        f"open_mig block mode mismatch{tag}"
+
+
 def usable_capacity_pages(state: SSDState, cfg: geometry.SimConfig, xp=jnp):
     """Usable capacity in pages: non-free blocks count at their current
     mode's page count; free blocks count at QLC density (they can be opened

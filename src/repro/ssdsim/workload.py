@@ -116,12 +116,17 @@ def uniform_read_trace(cfg: geometry.SimConfig, n_requests: int, seed: int = 0):
 def mixed_trace(cfg: geometry.SimConfig, n_requests: int, theta: float,
                 read_frac: float = 0.7, seed: int = 0,
                 arrival_rate: float | None = None,
-                arrival_dist: str = "poisson"):
-    """Zipf reads interleaved with uniform-random overwrites (paper §V-A).
+                arrival_dist: str = "poisson",
+                write_theta: float | None = None):
+    """Zipf reads interleaved with random overwrites (paper §V-A).
 
     Reads follow Zipf(theta) popularity over a fixed permutation; write
-    targets are drawn uniformly over the whole logical space, independent of
-    the read popularity ranking.
+    targets default to uniform over the whole logical space, independent of
+    the read popularity ranking. ``write_theta`` opts into Zipf-skewed
+    writes over an independent permutation instead — hot pages are
+    overwritten repeatedly, concentrating invalid pages in recently written
+    blocks, which is the workload shape that produces worthwhile GC victims
+    (the ``gc_pressure`` benchmark section uses this).
     """
     rng = np.random.default_rng(seed)
     L = cfg.n_logical
@@ -129,7 +134,11 @@ def mixed_trace(cfg: geometry.SimConfig, n_requests: int, theta: float,
     ranks = rng.choice(L, size=n_requests, p=p)
     perm = rng.permutation(L)
     r_lpn = perm[ranks]
-    w_lpn = rng.integers(0, L, size=n_requests)
+    if write_theta is None:
+        w_lpn = rng.integers(0, L, size=n_requests)
+    else:
+        w_ranks = rng.choice(L, size=n_requests, p=zipf_probs(L, write_theta))
+        w_lpn = rng.permutation(L)[w_ranks]
     is_read = rng.random(n_requests) < read_frac
     lpn = np.where(is_read, r_lpn, w_lpn).astype(np.int32)
     op = np.where(is_read, OP_READ, OP_WRITE).astype(np.int32)

@@ -64,6 +64,18 @@ class TestGateFunction:
         assert all(n.endswith("/chunks_per_sec") for n in names)
         assert not any("compile_s" in n for n in names)
 
+    def test_require_pins_guarded_set(self):
+        """--require names a metric that must exist in both artifacts —
+        the gc_pressure section cannot silently drop out of the gate."""
+        req = ("engine/gc_pressure/chunks_per_sec",)
+        with pytest.raises(ValueError, match="required metric"):
+            gate(_doc(), _doc(), require=req)
+        withgc = _doc()
+        withgc["rows"].append(
+            ["engine/gc_pressure/chunks_per_sec", 100.0, "chunks/s"])
+        entries = gate(withgc, withgc, require=req)
+        assert [e[4] for e in entries] == ["OK", "OK", "OK"]
+
 
 class TestGateMain:
     def _write(self, tmp_path, name, doc):
@@ -121,7 +133,10 @@ class TestGateMain:
         )
         rows = doc["tiny_baseline"]["rows"]
         assert doc["tiny_baseline"]["config"]["tiny"] is True
-        assert sum(r[0].endswith("/chunks_per_sec") for r in rows) == 2
+        names = [r[0] for r in rows if r[0].endswith("/chunks_per_sec")]
+        assert len(names) == 3
+        # the guarded set includes the fused-GC pressure section
+        assert "engine/gc_pressure/chunks_per_sec" in names
 
     def test_markdown_render(self):
         md = render_markdown(gate(_doc(), _doc()), 0.5, 0.8)

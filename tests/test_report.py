@@ -1,0 +1,53 @@
+"""Tests for benchmarks/report.py: the committed BENCH_*.json artifacts must
+render into the markdown summary without blowing up, and the key content
+(throughput trend, A/B records, hockey-stick, scaling rows) must appear."""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from benchmarks.report import engine_report, latency_report, main, render, sweep_report
+
+BENCH_DIR = Path(__file__).parent.parent / "benchmarks"
+
+
+class TestRenderCommittedArtifacts:
+    def test_render_all(self):
+        md = render(BENCH_DIR)
+        assert "### Engine throughput" in md
+        assert "### Latency vs offered load" in md
+        assert "### Sharded sweep scaling" in md
+
+    def test_engine_table_has_sections_and_keys(self):
+        doc = json.loads((BENCH_DIR / "BENCH_engine.json").read_text())
+        lines = engine_report(doc)
+        md = "\n".join(lines)
+        for sec in ("read_only", "mixed", "gc_pressure"):
+            assert sec in md
+        assert "tiny (CI gate baseline)" in md
+        # committed A/B records render with speedup columns
+        assert "dedup_fix" in md and "speedup" in md
+
+    def test_latency_hockey_stick_rows(self):
+        doc = json.loads((BENCH_DIR / "BENCH_latency.json").read_text())
+        md = "\n".join(latency_report(doc))
+        for pol in doc["curves"]:
+            assert f"**{pol}**" in md
+        n_scales = len(next(iter(doc["curves"].values()))["arrival_scale"])
+        assert md.count("| ") >= n_scales  # one table row per scale
+
+    def test_sweep_rows(self):
+        doc = json.loads((BENCH_DIR / "BENCH_sweep.json").read_text())
+        md = "\n".join(sweep_report(doc))
+        assert "sweep/scaling" in md
+
+    def test_main_appends_summary(self, tmp_path, monkeypatch):
+        monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+        summary = tmp_path / "summary.md"
+        assert main(["--dir", str(BENCH_DIR), "--summary", str(summary)]) == 0
+        assert "### Engine throughput" in summary.read_text()
+
+    def test_missing_dir_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            render(tmp_path)

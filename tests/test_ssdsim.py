@@ -13,33 +13,10 @@ TINY = geometry.tiny_config()
 
 
 def _invariants(s, cfg):
-    """Full-state consistency: mapping bijection, valid counts, mode ranges."""
-    l2p = np.array(s.l2p)
-    p2l = np.array(s.p2l)
-    spb = cfg.slots_per_block
-
-    mapped = l2p >= 0
-    # bijection on mapped pages
-    assert (p2l[l2p[mapped]] == np.arange(cfg.n_logical)[mapped]).all()
-    # every valid physical slot maps back
-    vslots = np.nonzero(p2l >= 0)[0]
-    assert (l2p[p2l[vslots]] == vslots).all()
-    # block_valid matches recount
-    bv = np.array(s.block_valid)
-    counts = np.bincount(vslots // spb, minlength=cfg.n_blocks)
-    assert (bv == counts).all()
-    # block metadata in range
-    bm = np.array(s.block_mode)
-    assert ((bm >= 0) & (bm <= 2)).all()
-    bn = np.array(s.block_next)
-    ppb = np.array(geometry.pages_per_block(cfg))
-    nonfree = np.array(s.block_state) != st.FREE
-    assert (bn[nonfree] <= ppb[bm[nonfree]]).all()
-    assert (bn >= bv).all()  # valid pages never exceed programmed pages
-    # incremental free-pool bookkeeping stays exact
-    assert int(s.free_count) == int((np.array(s.block_state) == st.FREE).sum())
-    hint = np.array(s.free_hint)
-    assert ((hint >= -1) & (hint < cfg.n_blocks)).all()
+    """Full-state consistency — delegated to the shared
+    ``state.check_invariants`` helper (mapping bijection, valid counts,
+    free-pool bookkeeping, cursor sanity)."""
+    st.check_invariants(s, cfg)
 
 
 class TestInit:

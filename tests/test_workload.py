@@ -94,6 +94,25 @@ class TestTraces:
         expect = len(w_lpn) / L
         assert w_counts.var() < 3.0 * expect
 
+    def test_mixed_trace_write_theta_skews_writes(self):
+        """``write_theta`` opts into Zipf-skewed overwrites (the gc_pressure
+        benchmark workload): hot pages are rewritten repeatedly, while the
+        default stays uniform; the write permutation is independent of the
+        read permutation."""
+        n = 40_000
+        tr = workload.mixed_trace(TINY, n, theta=1.2, read_frac=0.5, seed=0,
+                                  write_theta=2.0)
+        lpn = tr["lpn"].reshape(-1)[:n]
+        op = tr["op"].reshape(-1)[:n]
+        w_lpn = lpn[op == OP_WRITE]
+        w_counts = np.bincount(w_lpn, minlength=TINY.n_logical)
+        # Zipf(2.0): the ten hottest write targets dominate the stream
+        assert np.sort(w_counts)[-10:].sum() > 0.5 * len(w_lpn)
+        # determinism
+        tr2 = workload.mixed_trace(TINY, n, theta=1.2, read_frac=0.5, seed=0,
+                                   write_theta=2.0)
+        np.testing.assert_array_equal(tr["lpn"], tr2["lpn"])
+
     def test_lpns_in_range(self):
         for tr in (
             workload.zipf_read_trace(TINY, 5_000, 1.2, seed=3),

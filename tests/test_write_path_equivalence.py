@@ -38,6 +38,7 @@ def assert_state_equivalent(s_ref: st.SSDState, s_bat: st.SSDState, tag=""):
 def _run_both(s0, lpns, is_write, cfg):
     s_ref = engine.write_path_reference(s0, lpns, is_write, cfg)
     s_bat = engine.write_path_batched(s0, lpns, is_write, cfg)
+    st.check_invariants(s_bat, cfg, "batched write path")
     return s_ref, s_bat
 
 
@@ -62,6 +63,7 @@ def test_property_write_paths_equivalent(seed, theta, read_frac):
         s_ref = engine.write_path_reference(s_ref, lp, w, cfg)
         s_bat = engine.write_path_batched(s_bat, lp, w, cfg)
         assert_state_equivalent(s_ref, s_bat, tag=f"chunk {i}")
+        st.check_invariants(s_bat, cfg, f"chunk {i}")
 
 
 def test_single_lun_rollover_equivalent():
