@@ -1,0 +1,110 @@
+"""Observability smoke/export CLI (DESIGN.md §7.4): run a mixed workload
+with every instrument on, decode the in-scan accumulators, and emit
+
+- ``trace_obs.json`` — Chrome trace-event JSON (load in ui.perfetto.dev or
+  ``chrome://tracing``): one track per LUN of relocation slices + counter
+  tracks for the windowed time series;
+- ``BENCH_obs.json`` — harness-style rows (per-mode p99 tail attribution,
+  event totals) plus the full tail-attribution and conversion-event tables
+  the report renderer formats.
+
+  PYTHONPATH=src python -m benchmarks.obs_trace [--tiny] [--open-loop]
+      [--requests N] [--out DIR]
+
+``--tiny`` is the CI smoke (unit-test geometry); ``--open-loop`` attaches
+Poisson arrivals so the queue component is non-zero.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="unit-test geometry (CI smoke)")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="Poisson arrivals (exercises the queue component)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--arrival-rate", type=float, default=8000.0,
+                    help="open-loop offered load (requests/sec)")
+    ap.add_argument("--out", default=".", metavar="DIR")
+    args = ap.parse_args()
+
+    import jax
+
+    from benchmarks.engine_bench import bench_config
+    from repro.core import modes
+    from repro.ssdsim import engine, obs, trace_export, workload
+
+    base = bench_config(args.tiny)
+    cfg = dataclasses.replace(
+        base, obs_level="full", obs_event_capacity=4096,
+        obs_windows=128 if not args.tiny else 32,
+    )
+    n_requests = args.requests or (
+        16 * cfg.chunk if args.tiny else 40 * cfg.chunk
+    )
+    trace = workload.mixed_trace(
+        cfg, n_requests, 1.2, read_frac=0.7, seed=1,
+        arrival_rate=args.arrival_rate if args.open_loop else None,
+    )
+    s, _ = engine.run(cfg, trace)
+    s = jax.device_get(s)  # decoders run host-side on numpy leaves
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    trace_path = trace_export.write_chrome_trace(s, cfg, out / "trace_obs.json")
+
+    attrib = obs.tail_attribution(s, cfg)
+    records, total, dropped = obs.decode_events(s, cfg)
+    by_reason: dict[str, dict] = {}
+    for r in records:
+        d = by_reason.setdefault(r["reason_name"], {"events": 0, "pages": 0})
+        d["events"] += 1
+        d["pages"] += r["pages"]
+    mat = obs.event_conversion_matrix(records)
+
+    rows = []
+    print("name,value,unit")
+    for mode, a in attrib.items():
+        for comp, share in a["component_share"].items():
+            rows.append([f"obs/{mode}/p99_tail_{comp}_share", share,
+                         "fraction"])
+        rows.append([f"obs/{mode}/p99_tail_reads", a["tail_reads"], "reads"])
+    rows.append(["obs/events/total", float(total), "events"])
+    rows.append(["obs/events/dropped", float(dropped), "events"])
+    for n, v, u in rows:
+        print(f"{n},{v:.4f},{u}", flush=True)
+
+    doc = {
+        "bench": "obs",
+        "config": {
+            "tiny": args.tiny,
+            "open_loop": args.open_loop,
+            "n_requests": n_requests,
+            "obs_event_capacity": cfg.obs_event_capacity,
+            "obs_windows": cfg.obs_windows,
+            "obs_window_ms": cfg.obs_window_ms,
+        },
+        "rows": rows,
+        "tail_attribution": attrib,
+        "events_by_reason": by_reason,
+        "conversion_matrix": mat.tolist(),
+        "mode_names": list(modes.MODE_NAMES),
+        "n_conversions": np.asarray(s.n_conversions).tolist(),
+    }
+    p = out / "BENCH_obs.json"
+    p.write_text(json.dumps(doc, indent=1, sort_keys=True))
+    print(f"# wrote {trace_path}")
+    print(f"# wrote {p}")
+
+
+if __name__ == "__main__":
+    main()

@@ -127,10 +127,58 @@ def sweep_report(doc: dict) -> list[str]:
     return lines
 
 
+def obs_report(doc: dict) -> list[str]:
+    """Observability readout (DESIGN.md §7.4): per-mode p99 tail latency
+    attribution and the decoded conversion-event summary."""
+    lines = [
+        "### Latency attribution (p99 tail, per source mode)",
+        "",
+        "| mode | tail reads | tail edge µs | queue | sense | retry "
+        "| transfer |",
+        "|---|---:|---:|---:|---:|---:|---:|",
+    ]
+    for mode, a in doc.get("tail_attribution", {}).items():
+        sh = a["component_share"]
+        lines.append(
+            f"| {mode} | {_fmt(a['tail_reads'])} | {_fmt(a['tail_edge_us'])} "
+            f"| {sh['queue']:.1%} | {sh['sense']:.1%} | {sh['retry']:.1%} "
+            f"| {sh['transfer']:.1%} |"
+        )
+    by_reason = doc.get("events_by_reason", {})
+    if by_reason:
+        lines += [
+            "",
+            "### Conversion / relocation events",
+            "",
+            "| trigger | events | valid pages moved |",
+            "|---|---:|---:|",
+        ]
+        for reason, d in sorted(by_reason.items()):
+            lines.append(
+                f"| {reason} | {d['events']} | {_fmt(float(d['pages']))} |"
+            )
+    mat = doc.get("conversion_matrix")
+    names = doc.get("mode_names", [])
+    if mat and names:
+        lines += [
+            "",
+            "**Conversions (from → to, decoded from the event ring)**",
+            "",
+            "| from \\ to | " + " | ".join(names) + " |",
+            "|---|" + "---:|" * len(names),
+        ]
+        for name, row in zip(names, mat):
+            lines.append(
+                f"| {name} | " + " | ".join(_fmt(float(v)) for v in row) + " |"
+            )
+    return lines
+
+
 RENDERERS = {
     "BENCH_engine.json": engine_report,
     "BENCH_latency.json": latency_report,
     "BENCH_sweep.json": sweep_report,
+    "BENCH_obs.json": obs_report,
 }
 
 

@@ -359,17 +359,39 @@ _ROW_UNITS = {
     "erases": "erases",
     "reads": "reads",
     "writes": "writes",
+    "obs_events_total": "events",
+    "obs_events_dropped": "events",
 }
 
 
 def result_rows(res: dict, prefix: str = "sweep"):
     """Flatten one run result into harness-style (name, value, unit) rows."""
     tag = res["run"]["tag"]
-    return [
+    rows = [
         (f"{prefix}/{tag}/{k}", float(res[k]), u)
         for k, u in _ROW_UNITS.items()
         if k in res
     ]
+    # per-mode observability readout (present at obs_level="full"):
+    # retry share of each mode's p99 tail mass (DESIGN.md §7.4)
+    if "tail_retry_share" in res:
+        from repro.core import modes
+        rows += [
+            (f"{prefix}/{tag}/tail_retry_share_{name.lower()}",
+             float(v), "fraction")
+            for name, v in zip(modes.MODE_NAMES, res["tail_retry_share"])
+        ]
+    return rows
+
+
+def _json_safe(v):
+    """Summarize values are floats, nested lists, or ndarrays — normalize
+    all three to JSON-native types."""
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    if isinstance(v, (list, tuple)):
+        return [_json_safe(x) for x in v]
+    return float(v)
 
 
 def write_artifacts(results, out_dir, prefix: str = "sweep") -> list[Path]:
@@ -383,9 +405,7 @@ def write_artifacts(results, out_dir, prefix: str = "sweep") -> list[Path]:
             "name": f"{prefix}/{res['run']['tag']}",
             "run": res["run"],
             "metrics": {
-                k: (np.asarray(v).tolist() if isinstance(v, np.ndarray) else float(v))
-                for k, v in res.items()
-                if k != "run"
+                k: _json_safe(v) for k, v in res.items() if k != "run"
             },
             "rows": [list(r) for r in result_rows(res, prefix)],
         }

@@ -1,4 +1,24 @@
 # FEMU-analogue vectorized flash-storage simulator (DESIGN.md §2A).
-from repro.ssdsim import engine, ftl, geometry, policies, state, workload  # noqa: F401
+from repro.ssdsim import (  # noqa: F401
+    engine,
+    ftl,
+    geometry,
+    obs,
+    policies,
+    state,
+    telemetry,
+    trace_export,
+    workload,
+)
 
-__all__ = ["engine", "ftl", "geometry", "policies", "state", "workload"]
+__all__ = [
+    "engine",
+    "ftl",
+    "geometry",
+    "obs",
+    "policies",
+    "state",
+    "telemetry",
+    "trace_export",
+    "workload",
+]

@@ -35,7 +35,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import hotness, modes, reclaim, retry
-from repro.ssdsim import ftl, geometry, policies, telemetry
+from repro.ssdsim import ftl, geometry, obs, policies, telemetry
 from repro.ssdsim import state as st
 
 OP_READ = 0
@@ -380,6 +380,28 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
         lat_hist=s.lat_hist + chunk_hist,
     )
 
+    # ---------------- observability: read-path attribution ----------------
+    if obs.enabled(cfg):
+        # decompose each recorded read into queue / sense / retry / transfer
+        # components; the binning latency is exactly what lat_hist records,
+        # so the per-mode count histograms sum back to it bit for bit
+        base_us = jnp.where(rd, modes.READ_LATENCY_US[mode], 0.0)
+        if arrival is not None:
+            q_us = jnp.where(rd, queue_us, 0.0)
+            t_read_ms = dep_ms  # window by each read's own departure time
+            lat_us = rec_lat_us
+        else:
+            q_us = jnp.zeros_like(svc_us)
+            t_read_ms = jnp.broadcast_to(s.clock_ms, svc_us.shape)
+            lat_us = svc_us + xfer_us
+        s = obs.record_reads(
+            s, cfg, mode=mode, rd=rd, lat_us=lat_us, queue_us=q_us,
+            sense_us=base_us, retry_us=svc_us - base_us, xfer_us=xfer_us,
+            retries=retries, t_ms=t_read_ms,
+        )
+        obs0 = (s.n_writes, s.n_conversions.sum(), s.n_erases,
+                s.n_migrated_pages)
+
     # ---------------- heat update ----------------
     touched = rd | (ops == OP_WRITE)
     heat = hotness.decay_heat(s.heat, cfg.heat)
@@ -482,6 +504,16 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
             ),
         )
 
+    # ---------------- observability: per-window chunk series ----------------
+    if obs.enabled(cfg):
+        s = obs.record_chunk(
+            s, cfg, t_ms=s.clock_ms,
+            writes=s.n_writes - obs0[0],
+            conversions=s.n_conversions.sum() - obs0[1],
+            erases=s.n_erases - obs0[2],
+            migrated=s.n_migrated_pages - obs0[3],
+        )
+
     nonfree = s.block_state != st.FREE
     mode_hist = jax.ops.segment_sum(
         nonfree.astype(jnp.int32), s.block_mode, num_segments=3
@@ -539,7 +571,12 @@ def run(cfg: geometry.SimConfig, trace, has_writes: bool | None = None):
 
 
 def summarize(s: st.SSDState, cfg: geometry.SimConfig, threads: int = 4):
-    """Headline numbers for the paper's figures."""
+    """Headline numbers for the paper's figures.
+
+    Every value is JSON-safe (floats and nested lists only — no ndarrays,
+    no nested dicts): the sweep runner writes the dict straight to
+    ``summaries.json`` and ``assert_results_identical`` np.asarray's each
+    value, so both representations must round-trip."""
     import numpy as np
 
     n_reads = float(s.n_reads)
@@ -580,7 +617,8 @@ def summarize(s: st.SSDState, cfg: geometry.SimConfig, threads: int = 4):
         capacity_loss_gib=init_cap - cap,
         migrated_pages=float(s.n_migrated_pages),
         erases=float(s.n_erases),
-        conversions=np.asarray(s.n_conversions),
+        conversions=np.asarray(s.n_conversions).tolist(),
         reads=n_reads,
         writes=float(s.n_writes),
+        **obs.summary(s, cfg),
     )

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import modes, reclaim, retry
-from repro.ssdsim import geometry, state as st
+from repro.ssdsim import geometry, obs, state as st
 
 # Max destination blocks one conversion can need: one partially-filled open
 # migration block plus ceil(1024/256) = 4 fresh SLC blocks.
@@ -236,7 +236,8 @@ def migrate_block(s: st.SSDState, src, tgt_mode, cfg: geometry.SimConfig):
     the caller guards on free_block_count.
     """
     victims = jnp.asarray(src, jnp.int32).reshape((1,))
-    return relocate_group(s, victims, jnp.ones((1,), bool), tgt_mode, cfg, MAX_DEST)
+    return relocate_group(s, victims, jnp.ones((1,), bool), tgt_mode, cfg,
+                          MAX_DEST, reason=obs.REASON_CONV_BLOCK)
 
 
 def _migrate_block_reference(s: st.SSDState, src, tgt_mode, cfg: geometry.SimConfig):
@@ -318,10 +319,29 @@ def migrate_pages(s: st.SSDState, lpns, tgt_mode, cfg: geometry.SimConfig):
     s = _place_pages(s, lpns, valid, tgt_mode, cfg, _dest_unroll(cfg, M))
 
     conv = jax.ops.segment_sum(valid.astype(jnp.float32), src_mode, num_segments=3)
-    return s._replace(
+    s = s._replace(
         n_migrated_pages=s.n_migrated_pages + n_valid,
         n_conversions=s.n_conversions.at[:, tgt_mode].add(conv),
     )
+    if obs.full(cfg):
+        # one event per source mode with pages moved this call: block -1
+        # (page-granular — pages come from many blocks), trigger = the
+        # policy's per-read conversion pipeline, conversion weight = pages
+        retry_sum = jax.ops.segment_sum(
+            jnp.where(valid, retries.astype(jnp.float32), 0.0), src_mode,
+            num_segments=modes.N_MODES,
+        )
+        s = obs.record_events(
+            s, cfg,
+            mask=conv > 0,
+            block=jnp.full((modes.N_MODES,), -1, jnp.int32),
+            from_mode=jnp.arange(modes.N_MODES, dtype=jnp.int32),
+            to_mode=jnp.full((modes.N_MODES,), tgt_mode, jnp.int32),
+            reason=obs.REASON_CONV_PAGE,
+            retry_est=retry_sum / jnp.maximum(conv, 1.0),
+            pages=conv,
+        )
+    return s
 
 
 def maybe_migrate_pages(s: st.SSDState, lpns, tgt_mode, cfg: geometry.SimConfig):
@@ -345,7 +365,8 @@ def _demote_dest_unroll(cfg: geometry.SimConfig, tgt_mode: int, n_victims: int) 
 
 
 def relocate_group(s: st.SSDState, victims, grp, tgt_mode,
-                   cfg: geometry.SimConfig, n_dest: int):
+                   cfg: geometry.SimConfig, n_dest: int,
+                   reason: int = obs.REASON_CONV_BLOCK):
     """The fused relocation kernel (DESIGN.md §2A): migrate every
     ``grp``-masked victim block into ``tgt_mode`` in one placement pass,
     then erase all victims in one vectorized :func:`_erase_many`.
@@ -353,7 +374,10 @@ def relocate_group(s: st.SSDState, victims, grp, tgt_mode,
     GC relocation (tgt == victim mode), reclaim demotion (one call per
     demotion target) and block conversion (:func:`migrate_block`, K=1) are
     all this kernel with different victim sets; ``n_dest`` is the caller's
-    static bound on destination blocks one pass can open.
+    static bound on destination blocks one pass can open. ``reason`` tags
+    the per-victim observability events (DESIGN.md §7.4) with the trigger
+    that fired the pass; the scalar reference paths do not record events,
+    so the fused-vs-reference bit-identity tests run at ``obs_level="off"``.
     """
     spb = cfg.slots_per_block
 
@@ -381,6 +405,22 @@ def relocate_group(s: st.SSDState, victims, grp, tgt_mode,
         n_migrated_pages=s.n_migrated_pages + valid.sum(),
         n_conversions=s.n_conversions.at[conv_src, tgt_mode].add(1.0, mode="drop"),
     )
+    if obs.full(cfg):
+        pages = valid.sum(1).astype(jnp.float32)
+        retry_mean = jnp.where(valid, retries.astype(jnp.float32), 0.0).sum(
+            1
+        ) / jnp.maximum(pages, 1.0)
+        s = obs.record_events(
+            s, cfg,
+            mask=grp,
+            block=vb,
+            from_mode=src_mode,
+            to_mode=jnp.broadcast_to(jnp.asarray(tgt_mode, jnp.int32),
+                                     vb.shape),
+            reason=reason,
+            retry_est=retry_mean,
+            pages=pages,
+        )
     return _erase_many(s, victims, grp, cfg)
 
 
@@ -397,7 +437,8 @@ def reclaim_victims(s: st.SSDState, victims, v_ok, v_tgt, cfg: geometry.SimConfi
         s = lax.cond(
             ok,
             lambda s_, grp=grp, tgt=tgt: relocate_group(
-                s_, victims, grp, tgt, cfg, _demote_dest_unroll(cfg, tgt, K)
+                s_, victims, grp, tgt, cfg, _demote_dest_unroll(cfg, tgt, K),
+                reason=obs.REASON_RECLAIM,
             ),
             lambda s_: s_,
             s,
@@ -486,7 +527,8 @@ def _gc_pass(s: st.SSDState, cfg: geometry.SimConfig):
     go = grp.any() & (free_block_count(s) >= _gc_dest_need(cfg, k) + 2)
     return lax.cond(
         go,
-        lambda s_: relocate_group(s_, victims, grp, tgt, cfg, k + 1),
+        lambda s_: relocate_group(s_, victims, grp, tgt, cfg, k + 1,
+                                  reason=obs.REASON_GC),
         lambda s_: s_,
         s,
     )

@@ -39,6 +39,15 @@ class SimConfig:
     device_age_h: float = 100.0  # retention baseline (pre-aged device)
     channel_mb_s: float = 800.0  # ONFI channel bandwidth for page transfer
 
+    # --- observability (DESIGN.md §7.4) ---
+    # "off": no obs ops traced at all (zero-length accumulator leaves);
+    # "counters": per-mode latency count histograms + windowed time series;
+    # "full": + per-component latency decomposition + the event ring buffer.
+    obs_level: str = "off"
+    obs_event_capacity: int = 256  # ring slots (overwrite-oldest beyond)
+    obs_windows: int = 64  # time-series windows (last absorbs overflow)
+    obs_window_ms: float = 50.0  # simulated time per window
+
     # --- policy ---
     policy: int = RARO
     r1: int = 1

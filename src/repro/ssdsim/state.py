@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import modes
-from repro.ssdsim import geometry, telemetry
+from repro.ssdsim import geometry, obs, telemetry
 
 FREE = 0
 OPEN = 1
@@ -62,6 +62,15 @@ class SSDState(NamedTuple):
     # telemetry
     lat_hist: jnp.ndarray  # (telemetry.N_LAT_BINS,) f32 read-latency histogram
     w_lat_hist: jnp.ndarray  # (telemetry.N_LAT_BINS,) f32 write-latency histogram
+
+    # observability accumulators (DESIGN.md §7.4; shapes collapse to
+    # zero-length when the instrument is off, so obs_level="off" carries
+    # nothing extra through the scan)
+    obs_lat_mode: jnp.ndarray  # (3|0, N_LAT_BINS) per-mode read counts
+    obs_lat_comp: jnp.ndarray  # (3|0, N_COMPONENTS, N_LAT_BINS) µs sums
+    obs_events: jnp.ndarray  # (capacity|0, N_EV_FIELDS) f32 event ring
+    obs_ev_count: jnp.ndarray  # i32 scalar — true total events emitted
+    obs_ts: jnp.ndarray  # (windows|0, N_SERIES) windowed time series
 
     # counters (f32 scalars; summed per-chunk so precision is fine)
     svc_sum_ms: jnp.ndarray  # total recorded user-read latency (queueing
@@ -127,6 +136,7 @@ def init_state(cfg: geometry.SimConfig, initial_pe=None) -> SSDState:
         free_hint=free_hint,
         lat_hist=jnp.zeros((telemetry.N_LAT_BINS,), jnp.float32),
         w_lat_hist=jnp.zeros((telemetry.N_LAT_BINS,), jnp.float32),
+        **obs.init_leaves(cfg),
         clock_ms=jnp.float32(0.0),
         lun_busy_ms=jnp.zeros((cfg.n_luns,), jnp.float32),
         chan_busy_ms=jnp.zeros((cfg.n_channels,), jnp.float32),

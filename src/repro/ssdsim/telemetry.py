@@ -47,6 +47,28 @@ def record(hist, lat_us, mask):
     return hist.at[idx].add(1.0, mode="drop")
 
 
+def quantile_bin(hist, q: float) -> int:
+    """Index of the bin containing quantile ``q`` of a count histogram.
+
+    Shared bin geometry for the observability layer (DESIGN.md §7.4): the
+    latency-attribution tail readout sums component mass over bins at and
+    above a mode's q-bin, so it must select bins exactly the way
+    :func:`percentiles` does — same ``searchsorted`` + empty-bin advance.
+    Returns 0 for an empty histogram.
+    """
+    h = np.asarray(hist, np.float64)
+    total = h.sum()
+    if total <= 0:
+        return 0
+    cum = np.cumsum(h)
+    b = int(np.searchsorted(cum, q * total, side="left"))
+    nonempty = np.nonzero(h > 0)[0]
+    if b >= N_LAT_BINS or h[b] <= 0:
+        later = nonempty[nonempty > b] if b < N_LAT_BINS else nonempty[:0]
+        b = int(later[0]) if len(later) else int(nonempty[-1])
+    return b
+
+
 def percentiles(hist, qs=(0.5, 0.95, 0.99, 0.999)) -> dict[float, float]:
     """Extract latency quantiles (us) from a histogram by log interpolation.
 

@@ -7,7 +7,14 @@ from pathlib import Path
 
 import pytest
 
-from benchmarks.report import engine_report, latency_report, main, render, sweep_report
+from benchmarks.report import (
+    engine_report,
+    latency_report,
+    main,
+    obs_report,
+    render,
+    sweep_report,
+)
 
 BENCH_DIR = Path(__file__).parent.parent / "benchmarks"
 
@@ -41,6 +48,15 @@ class TestRenderCommittedArtifacts:
         doc = json.loads((BENCH_DIR / "BENCH_sweep.json").read_text())
         md = "\n".join(sweep_report(doc))
         assert "sweep/scaling" in md
+
+    def test_obs_attribution_tables(self):
+        doc = json.loads((BENCH_DIR / "BENCH_obs.json").read_text())
+        md = "\n".join(obs_report(doc))
+        assert "### Latency attribution" in md
+        for mode in ("SLC", "TLC", "QLC"):
+            assert f"| {mode} |" in md
+        assert "### Conversion / relocation events" in md
+        assert "from → to" in md
 
     def test_main_appends_summary(self, tmp_path, monkeypatch):
         monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
