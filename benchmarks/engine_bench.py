@@ -32,6 +32,14 @@ import jax.numpy as jnp
 GC_PRESSURE_READ_FRAC = 0.1
 GC_PRESSURE_WRITE_THETA = 2.0
 
+# fault rates for the mixed_faults section: high enough that every fault
+# class fires (the section prices the injected draws + recovery scatters,
+# not just the dormant branches), shared with the provenance dict
+FAULT_MAX_READ_RETRIES = 6
+FAULT_PROG_FAIL_RATE = 0.01
+FAULT_ERASE_FAIL_RATE = 0.02
+FAULT_SEED = 1
+
 
 def bench_config(tiny: bool):
     from repro.ssdsim import geometry
@@ -103,11 +111,22 @@ def _sections(tiny: bool, n_requests: int):
     # prices the observability layer (DESIGN.md §7.4) and the regression
     # gate's ``mixed`` row doubles as the obs_level="off" zero-cost guard
     obs_cfg = dataclasses.replace(cfg, obs_level="full")
+    # same geometry + trace as ``mixed`` with the fault model armed: the pair
+    # prices the fault-injection layer (DESIGN.md §2D) — counter-hash draws,
+    # the collapsed-retry read path, and the re-placement/retirement scatters
+    flt_cfg = dataclasses.replace(
+        cfg,
+        max_read_retries=FAULT_MAX_READ_RETRIES,
+        prog_fail_rate=FAULT_PROG_FAIL_RATE,
+        erase_fail_rate=FAULT_ERASE_FAIL_RATE,
+        fault_seed=FAULT_SEED,
+    )
     return {
         "read_only": (
             cfg, workload.zipf_read_trace(cfg, n_requests, 1.2, seed=1), False),
         "mixed": (cfg, mixed_trace, True),
         "mixed_obs_full": (obs_cfg, mixed_trace, True),
+        "mixed_faults": (flt_cfg, mixed_trace, True),
         "gc_pressure": (
             gc_cfg,
             workload.mixed_trace(gc_cfg, n_requests, 1.2, seed=1,
@@ -222,6 +241,12 @@ def main() -> None:
                 "gc_victims_per_pass": gc_cfg.gc_victims_per_pass,
                 "read_frac": GC_PRESSURE_READ_FRAC,
                 "write_theta": GC_PRESSURE_WRITE_THETA,
+            },
+            "mixed_faults": {
+                "max_read_retries": FAULT_MAX_READ_RETRIES,
+                "prog_fail_rate": FAULT_PROG_FAIL_RATE,
+                "erase_fail_rate": FAULT_ERASE_FAIL_RATE,
+                "fault_seed": FAULT_SEED,
             },
         },
         "rows": rows,

@@ -65,14 +65,19 @@ def main() -> None:
             msr_requests=8_000 if q else 24_000,
             out_dir=args.artifacts,
             devices=args.devices)),
+        ("faults", lambda: sweep_bench.sweep_fault_storm(
+            12_000 if q else 40_000,
+            out_dir=args.artifacts,
+            devices=args.devices)),
         ("tiered_kv", lambda: tiered_kv.kv_policy_comparison(24 if q else 48)),
     ]
 
     print("name,value,unit")
-    failures = 0
+    ran, failed = 0, []
     for name, fn in sections:
         if args.only and args.only not in name:
             continue
+        ran += 1
         t0 = time.time()
         try:
             rows = []
@@ -86,10 +91,13 @@ def main() -> None:
                 print(f"# wrote {p}", flush=True)
             print(f"# section {name} took {time.time()-t0:.1f}s", flush=True)
         except Exception as e:  # keep the harness going
-            failures += 1
+            failed.append(name)
             print(f"# section {name} FAILED: {type(e).__name__}: {e}", flush=True)
-    if failures:
+    if failed:
+        print(f"# {len(failed)}/{ran} sections FAILED: {', '.join(failed)}",
+              flush=True)
         sys.exit(1)
+    print(f"# all {ran} sections passed", flush=True)
 
 
 if __name__ == "__main__":

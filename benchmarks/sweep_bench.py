@@ -90,6 +90,27 @@ def sweep_tail_latency(n_requests=80_000, msr_requests=24_000, out_dir=None,
     return rows
 
 
+def sweep_fault_storm(n_requests=40_000, out_dir=None, devices=None):
+    """Fault-injection section rows: the ``fault_storm`` trace swept over the
+    fault axes (``configs.raro_ssd.fault_storm_sweep``), reporting tail
+    latency alongside the fault counters so the recovery paths (ECC penalty,
+    re-placement, bad-block retirement) show up in the harness output."""
+    from repro.configs import raro_ssd
+    from repro.experiments import sweep
+
+    spec = raro_ssd.fault_storm_sweep(n_requests=n_requests)
+    res = sweep.run_sweep(spec, verbose=True, devices=devices)
+    rows = []
+    for r in res:
+        rows += sweep.result_rows(r)
+    rows += _p99_ratio_rows(res, "fault_storm")
+
+    if out_dir is not None:
+        paths = sweep.write_artifacts(res, out_dir)
+        print(f"# wrote {len(paths)} BENCH_*.json artifacts to {out_dir}", flush=True)
+    return rows
+
+
 # ------------------------- sharded scaling bench ---------------------------
 
 

@@ -47,6 +47,34 @@ def sharded_sweep(scenario: str = "read_disturb_hammer",
     )
 
 
+def fault_storm_sweep(scenario: str = "fault_storm",
+                      n_requests: int = 40_000,
+                      prog_fail_rate=(0.0, 0.005),
+                      erase_fail_rate=(0.02,),
+                      max_read_retries: int = 10,
+                      stage: str = "old", seeds=(0,)):
+    """Failure-mode experiment grid (DESIGN.md §2D): the write-heavy
+    ``fault_storm`` trace on a worn device, swept over program-failure rates
+    with erase failures retiring blocks and a finite read-retry budget, so
+    baseline-vs-RARO is compared under uncorrectable reads, bad-block
+    retirement pressure and the re-placement/stall recovery paths. The
+    fault-free point (rate 0.0) rides in the same compiled batch and stays
+    bit-identical to a fault-free run."""
+    from repro.experiments.sweep import SweepSpec
+
+    return SweepSpec(
+        scenario=scenario,
+        n_requests=n_requests,
+        policies=(BASELINE, RARO),
+        initial_pe=(STAGE_PE[stage],),
+        seeds=tuple(seeds),
+        prog_fail_rate=tuple(prog_fail_rate),
+        erase_fail_rate=tuple(erase_fail_rate),
+        max_read_retries=(max_read_retries,),
+        base=SimConfig(device_age_h=24.0),
+    )
+
+
 def latency_load_sweep(scenario: str = "hammer_openloop",
                        n_requests: int = 80_000,
                        rate_iops: float = 50_000.0,

@@ -1,0 +1,127 @@
+"""Deterministic fault-injection model (DESIGN.md §2D).
+
+The dominant NAND field-failure modes firmware must survive (Cai et al.'s
+error-characterization survey, PAPERS.md) are injected as three device-level
+fault classes, all jit/vmap/shard_map-safe with static shapes:
+
+  uncorrectable reads — a read whose Eq.-3 retry count exceeds the device
+      retry budget (``max_read_retries``) does not decode on-chip: the
+      controller burns the full retry budget, then pays an ECC
+      soft-decode/recovery penalty (``read_recovery_us``) and the read is
+      counted in ``SSDState.n_uncorrectable``.
+  program failures — each user-path page program fails with probability
+      ``prog_fail_rate``; the failed slot is wasted (programmed but invalid)
+      and the page is re-placed through the shared ``ftl._place_pages``
+      machinery onto a fresh open block.
+  erase failures — each block erase fails with probability
+      ``erase_fail_rate``; the block is retired into the bad-block map
+      (``SSDState.block_bad``, state ``BAD``) and never allocated again.
+
+Randomness is a stateless counter-style hash (same construction as
+``rber.page_variation``) keyed on *what* is failing and the block's P/E
+cycle at the time, so a given run is bit-reproducible under jit/vmap and a
+fault schedule is a pure function of ``(seed, state trajectory)`` — no PRNG
+key threading through the scan.
+
+Two activation paths share the model:
+
+  static  — nonzero ``SimConfig`` fault knobs (``cfg.faults_enabled``); the
+      constants are baked into the compiled program.
+  traced  — ``RunKnobs`` fault fields (the sweep runner's fault-rate axis);
+      a whole grid of fault rates shares one compiled program, and a traced
+      rate of exactly zero reproduces the fault-free engine output bit for
+      bit (pinned by ``tests/test_faults.py``).
+
+``params_for`` resolves the two into one :class:`FaultParams` bundle (or
+``None`` when fault injection is statically off, in which case no fault ops
+are traced at all — the pre-change program).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class FaultParams(NamedTuple):
+    """Resolved fault knobs for one run (scalars, possibly traced).
+
+    ``max_read_retries < 0`` disables the uncorrectable-read path for the
+    run even when program/erase faults are active; rates of 0.0 never draw
+    a failure. ``read_recovery_us`` is always static (from ``SimConfig``).
+    """
+
+    max_read_retries: jnp.ndarray  # i32; < 0 = reads always decode
+    prog_fail_rate: jnp.ndarray  # f32 probability per page program
+    erase_fail_rate: jnp.ndarray  # f32 probability per block erase
+    seed: jnp.ndarray  # i32 run-level stream selector
+    read_recovery_us: float  # static ECC soft-decode/recovery penalty
+
+
+def params_for(cfg, knobs=None) -> FaultParams | None:
+    """Resolve ``SimConfig`` + optional ``RunKnobs`` into fault parameters.
+
+    Returns ``None`` when fault injection is statically off — neither the
+    config nor the knobs carry fault fields — so callers can gate the fault
+    ops out of the trace entirely (the bit-identical no-fault path).
+    """
+    has_knob_faults = knobs is not None and knobs.prog_fail_rate is not None
+    if not (cfg.faults_enabled or has_knob_faults):
+        return None
+    if has_knob_faults:
+        return FaultParams(
+            max_read_retries=jnp.asarray(knobs.max_read_retries, jnp.int32),
+            prog_fail_rate=jnp.asarray(knobs.prog_fail_rate, jnp.float32),
+            erase_fail_rate=jnp.asarray(knobs.erase_fail_rate, jnp.float32),
+            seed=jnp.asarray(knobs.fault_seed, jnp.int32),
+            read_recovery_us=cfg.read_recovery_us,
+        )
+    return FaultParams(
+        max_read_retries=jnp.int32(cfg.max_read_retries),
+        prog_fail_rate=jnp.float32(cfg.prog_fail_rate),
+        erase_fail_rate=jnp.float32(cfg.erase_fail_rate),
+        seed=jnp.int32(cfg.fault_seed),
+        read_recovery_us=cfg.read_recovery_us,
+    )
+
+
+# draw-stream selectors: program and erase failures must never share a draw
+# even when keyed on the same (id, pe) pair
+STREAM_PROG = jnp.uint32(0x50524F47)  # "PROG"
+STREAM_ERASE = jnp.uint32(0x45525345)  # "ERSE"
+
+
+def _mix(h):
+    """One finalization round of the repo's xorshift-multiply hash."""
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def uniform01(ident, cycle, seed, stream):
+    """Stateless uniform (0, 1) draw keyed on (id, P/E cycle, seed, stream).
+
+    ``ident`` is the failing entity (slot for programs, block for erases)
+    and ``cycle`` its block's P/E count at the time, so re-using a block
+    after an erase draws fresh outcomes — a schedule, not a fixed per-block
+    fate. Same hash family as ``rber.page_variation``; deterministic under
+    jit/vmap and identical across devices.
+    """
+    h = jnp.asarray(ident, jnp.uint32) * jnp.uint32(0x9E3779B9)
+    h = _mix(h ^ (jnp.asarray(cycle, jnp.uint32) * jnp.uint32(0x68E31DA4)))
+    h = _mix(h ^ (jnp.asarray(seed, jnp.uint32) * jnp.uint32(0xB5297A4D)) ^ stream)
+    return (jnp.float32(h & jnp.uint32(0xFFFFFF)) + 0.5) / jnp.float32(1 << 24)
+
+
+def prog_fails(p: FaultParams, slots, pe):
+    """Per-lane program-failure draw for slots about to be programmed."""
+    return uniform01(slots, pe, p.seed, STREAM_PROG) < p.prog_fail_rate
+
+
+def erase_fails(p: FaultParams, blocks, pe):
+    """Per-lane erase-failure draw for blocks about to be erased."""
+    return uniform01(blocks, pe, p.seed, STREAM_ERASE) < p.erase_fail_rate

@@ -132,6 +132,23 @@ def write_burst_then_read(cfg: geometry.SimConfig, n_requests: int, seed: int = 
     return workload._pack(cfg, lpn, op)
 
 
+@register("fault_storm")
+def fault_storm(cfg: geometry.SimConfig, n_requests: int, seed: int = 0,
+                theta: float = 1.2, read_frac: float = 0.3,
+                write_theta: float = 2.0):
+    """Write-heavy Zipf overwrites plus skewed re-reads: the workload shape
+    under which every injected fault class (DESIGN.md §2D) actually fires.
+    Concentrated overwrites manufacture GC victims, so erases happen at a
+    steady rate (erase failures -> bad-block retirement), the write stream
+    exercises program failures and the re-placement path, and the hot read
+    set keeps hammering aged pages (uncorrectable reads once a retry budget
+    is set). The elevated P/E cycles and the fault rates themselves ride on
+    the config / sweep fault axes — pair this trace with
+    ``configs.raro_ssd.fault_storm_sweep``."""
+    return workload.mixed_trace(cfg, n_requests, theta, read_frac=read_frac,
+                                seed=seed, write_theta=write_theta)
+
+
 @register("zipf_openloop")
 def zipf_openloop(cfg: geometry.SimConfig, n_requests: int, seed: int = 0,
                   theta: float = 1.2, rate_iops: float = 50_000.0,

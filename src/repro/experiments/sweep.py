@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import itertools
 import json
+import time
 import warnings
 from dataclasses import dataclass, field, replace
 from functools import partial
@@ -64,6 +65,16 @@ class SweepSpec:
     # whole latency-vs-load curve batches through one compiled program.
     # Ignored (with a warning) for closed-loop scenarios.
     arrival_scale: tuple[float, ...] = (1.0,)
+    # fault-injection axes (DESIGN.md §2D), batched through RunKnobs like
+    # the policy knobs: while every axis sits at its fault-free default the
+    # knob fields stay None and no fault ops are traced; any non-default
+    # value activates them for the whole grid (a traced rate of exactly 0.0
+    # stays bit-identical to the fault-free program, so mixed grids are
+    # safe).
+    prog_fail_rate: tuple[float, ...] = (0.0,)
+    erase_fail_rate: tuple[float, ...] = (0.0,)
+    max_read_retries: tuple[int, ...] = (-1,)
+    fault_seed: tuple[int, ...] = (0,)
     # forwarded to the scenario builder (e.g. {"theta": 1.2}); tuple-of-items
     # so the spec stays hashable
     scenario_kw: tuple[tuple[str, object], ...] = ()
@@ -72,7 +83,17 @@ class SweepSpec:
     def n_runs(self) -> int:
         return (len(self.policies) * len(self.initial_pe) * len(self.seeds)
                 * len(self.r1) * len(self.r2_override)
-                * len(self.arrival_scale))
+                * len(self.arrival_scale) * len(self.prog_fail_rate)
+                * len(self.erase_fail_rate) * len(self.max_read_retries)
+                * len(self.fault_seed))
+
+    def faults_on(self) -> bool:
+        """Any fault axis off its fault-free default -> the grid batches
+        fault knobs through RunKnobs (see ``faults.params_for``)."""
+        return (self.prog_fail_rate != (0.0,)
+                or self.erase_fail_rate != (0.0,)
+                or self.max_read_retries != (-1,)
+                or self.fault_seed != (0,))
 
 
 @dataclass(frozen=True)
@@ -86,6 +107,10 @@ class RunSpec:
     r1: int
     r2_override: int
     arrival_scale: float = 1.0
+    prog_fail_rate: float = 0.0
+    erase_fail_rate: float = 0.0
+    max_read_retries: int = -1
+    fault_seed: int = 0
 
     def tag(self) -> str:
         parts = [
@@ -100,15 +125,24 @@ class RunSpec:
             parts.append(f"r2_{self.r2_override}")
         if self.arrival_scale != 1.0:
             parts.append(f"load{self.arrival_scale:g}")
+        if self.prog_fail_rate != 0.0:
+            parts.append(f"pfail{self.prog_fail_rate:g}")
+        if self.erase_fail_rate != 0.0:
+            parts.append(f"efail{self.erase_fail_rate:g}")
+        if self.max_read_retries >= 0:
+            parts.append(f"mrr{self.max_read_retries}")
+        if self.fault_seed != 0:
+            parts.append(f"fseed{self.fault_seed}")
         return "_".join(parts)
 
 
 def expand(spec: SweepSpec) -> list[RunSpec]:
     return [
-        RunSpec(spec.scenario, pol, pe, seed, r1, r2, scale)
-        for pol, pe, seed, r1, r2, scale in itertools.product(
+        RunSpec(spec.scenario, pol, pe, seed, r1, r2, scale, pf, ef, mrr, fs)
+        for pol, pe, seed, r1, r2, scale, pf, ef, mrr, fs in itertools.product(
             spec.policies, spec.initial_pe, spec.seeds, spec.r1,
-            spec.r2_override, spec.arrival_scale
+            spec.r2_override, spec.arrival_scale, spec.prog_fail_rate,
+            spec.erase_fail_rate, spec.max_read_retries, spec.fault_seed
         )
     ]
 
@@ -192,11 +226,17 @@ def resolve_devices(devices):
         if devices < 1:
             raise ValueError(f"devices must be >= 1, got {devices}")
         if devices > len(avail):
-            raise ValueError(
-                f"requested {devices} devices but only {len(avail)} visible "
+            # clamp-and-warn rather than abort: an over-asked sweep on a
+            # smaller host still runs (bit-identical results, just less
+            # parallel), which is what a batch harness wants
+            warnings.warn(
+                f"requested {devices} devices but only {len(avail)} visible; "
+                f"clamping to {len(avail)} "
                 f"(hint: XLA_FLAGS=--xla_force_host_platform_device_count=N "
-                f"fakes N host devices)"
+                f"fakes N host devices)",
+                stacklevel=2,
             )
+            devices = len(avail)
         return tuple(avail[:devices])
     return tuple(devices)
 
@@ -226,8 +266,50 @@ def assert_results_identical(a, b):
                 )
 
 
+def _group_ckpt_path(resume_dir, spec: SweepSpec, pol: int) -> Path:
+    return (Path(resume_dir)
+            / f"ckpt_{spec.scenario}_{geometry.POLICY_NAMES[pol]}.json")
+
+
+def _load_group_checkpoint(path: Path, expect_tags, spec: SweepSpec,
+                           threads: int):
+    """Completed-group results from a prior run, or None when absent/stale.
+
+    A checkpoint is only honored when its run tags (which encode every knob
+    of every run in order), request count and thread model match — anything
+    else is a different experiment and must re-run."""
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, ValueError):
+        return None
+    if (doc.get("tags") != expect_tags
+            or doc.get("n_requests") != spec.n_requests
+            or doc.get("threads") != threads):
+        return None
+    return doc["results"]
+
+
+def _write_group_checkpoint(path: Path, expect_tags, spec: SweepSpec,
+                            threads: int, group_results) -> None:
+    """Persist one completed policy group. Write-then-rename so a kill
+    mid-write never leaves a truncated checkpoint; JSON float round-trips
+    are exact in Python 3, so resumed results satisfy
+    :func:`assert_results_identical` against an uninterrupted run."""
+    path.parent.mkdir(parents=True, exist_ok=True)
+    doc = dict(tags=expect_tags, n_requests=spec.n_requests, threads=threads,
+               results=group_results)
+    tmp = path.with_name(path.name + ".tmp")
+    tmp.write_text(json.dumps(doc))
+    tmp.replace(path)
+
+
+def _retry_delays(max_retries: int, backoff_s: float):
+    return [backoff_s * (2 ** i) for i in range(max_retries)]
+
+
 def run_sweep(spec: SweepSpec, threads: int = 4, verbose: bool = False,
-              devices=None):
+              devices=None, resume_dir=None, max_retries: int = 2,
+              retry_backoff_s: float = 0.5):
     """Execute the grid. Returns one result dict per run: everything from
     ``engine.summarize`` (mean + p50/p95/p99/p999 read latency, IOPS,
     capacity, ...) plus the run's metadata under ``"run"``.
@@ -237,10 +319,21 @@ def run_sweep(spec: SweepSpec, threads: int = 4, verbose: bool = False,
     shards the run axis across those devices (identical results — see
     :func:`_sweep_sharded_jit`). Every policy group is dispatched before any
     result is fetched, so compile and execution overlap across groups.
+
+    Robustness (DESIGN.md §2D): ``resume_dir`` checkpoints each completed
+    policy group to disk and deterministically resumes from matching
+    checkpoints on a rerun — a killed sweep repeats only the unfinished
+    groups and the merged results are identical to an uninterrupted run.
+    Device dispatch/fetch failures are retried ``max_retries`` times with
+    exponential backoff (``retry_backoff_s`` doubling per attempt); a group
+    still failing after that does not lose the rest of the grid — every
+    other group completes (and checkpoints) before a ``RuntimeError`` names
+    the poisoned groups.
     """
     devs = resolve_devices(devices)  # validate before the trace-build cost
     runs = expand(spec)
     kw = dict(spec.scenario_kw)
+    faults_on = spec.faults_on()
     if len(spec.seeds) > 1 and registry.is_seed_invariant(spec.scenario):
         warnings.warn(
             f"scenario {spec.scenario!r} is deterministic w.r.t. seed; "
@@ -276,51 +369,120 @@ def run_sweep(spec: SweepSpec, threads: int = 4, verbose: bool = False,
     for pol in spec.policies:  # static axis -> one compile each
         group = [r for r in runs if r.policy == pol]
         cfg = replace(spec.base, policy=pol)
-        # pad uneven grids (and grids smaller than the device count) with
-        # dummy replicas of the last run so the run axis divides the mesh;
-        # the pads are dropped on the host below, never summarized
-        n_pad = (-len(group)) % len(devs) if devs is not None else 0
-        padded = group + [group[-1]] * n_pad
-        # stacked on the host (numpy): the vmap path lets jit move them to
-        # the default device as before, the sharded path transfers each
-        # array exactly once, straight to its run-sharded layout
-        lpns = np.stack([np.asarray(traces[r.seed]["lpn"], np.int32) for r in padded])
-        ops = np.stack([np.asarray(traces[r.seed]["op"], np.int32) for r in padded])
-        arr = (
-            np.stack([np.asarray(traces[r.seed]["arrival_ms"], np.float32)
-                      for r in padded])
-            if open_loop else None
-        )
-        knobs = policies.RunKnobs(
-            r1=np.asarray([r.r1 for r in padded], np.int32),
-            r2_override=np.asarray([r.r2_override for r in padded], np.int32),
-            initial_pe=np.asarray([r.initial_pe for r in padded], np.int32),
-            arrival_scale=(
-                np.asarray([r.arrival_scale for r in padded], np.float32)
+        expect_tags = [r.tag() for r in group]
+        if resume_dir is not None:
+            cached = _load_group_checkpoint(
+                _group_ckpt_path(resume_dir, spec, pol), expect_tags, spec,
+                threads,
+            )
+            if cached is not None:
+                if verbose:
+                    print(f"# sweep group policy={geometry.POLICY_NAMES[pol]}"
+                          f": {len(group)} runs resumed from checkpoint",
+                          flush=True)
+                pending.append((group, cfg, None, None, cached))
+                continue
+
+        def _dispatch(group=group, cfg=cfg, pol=pol):
+            # pad uneven grids (and grids smaller than the device count)
+            # with dummy replicas of the last run so the run axis divides
+            # the mesh; the pads are dropped on the host below, never
+            # summarized
+            n_pad = (-len(group)) % len(devs) if devs is not None else 0
+            padded = group + [group[-1]] * n_pad
+            # stacked on the host (numpy): the vmap path lets jit move them
+            # to the default device as before, the sharded path transfers
+            # each array exactly once, straight to its run-sharded layout
+            lpns = np.stack([np.asarray(traces[r.seed]["lpn"], np.int32) for r in padded])
+            ops = np.stack([np.asarray(traces[r.seed]["op"], np.int32) for r in padded])
+            arr = (
+                np.stack([np.asarray(traces[r.seed]["arrival_ms"], np.float32)
+                          for r in padded])
                 if open_loop else None
-            ),
-        )
-        if verbose:
-            where = (f"sharded over {len(devs)} devices"
-                     f" (+{n_pad} pad)" if devs is not None else "one device")
-            print(f"# sweep group policy={geometry.POLICY_NAMES[pol]}: "
-                  f"{len(group)} runs in one jit, {where}", flush=True)
-        if mesh is None:
-            states = _sweep_jit(cfg, lpns, ops, has_writes, knobs, arr)
-        else:
+            )
+            knobs = policies.RunKnobs(
+                r1=np.asarray([r.r1 for r in padded], np.int32),
+                r2_override=np.asarray([r.r2_override for r in padded], np.int32),
+                initial_pe=np.asarray([r.initial_pe for r in padded], np.int32),
+                arrival_scale=(
+                    np.asarray([r.arrival_scale for r in padded], np.float32)
+                    if open_loop else None
+                ),
+                prog_fail_rate=(
+                    np.asarray([r.prog_fail_rate for r in padded], np.float32)
+                    if faults_on else None
+                ),
+                erase_fail_rate=(
+                    np.asarray([r.erase_fail_rate for r in padded], np.float32)
+                    if faults_on else None
+                ),
+                max_read_retries=(
+                    np.asarray([r.max_read_retries for r in padded], np.int32)
+                    if faults_on else None
+                ),
+                fault_seed=(
+                    np.asarray([r.fault_seed for r in padded], np.int32)
+                    if faults_on else None
+                ),
+            )
+            if verbose:
+                where = (f"sharded over {len(devs)} devices"
+                         f" (+{n_pad} pad)" if devs is not None else "one device")
+                print(f"# sweep group policy={geometry.POLICY_NAMES[pol]}: "
+                      f"{len(group)} runs in one jit, {where}", flush=True)
+            if mesh is None:
+                return _sweep_jit(cfg, lpns, ops, has_writes, knobs, arr)
             place = lambda x: jax.device_put(x, run_sharding)  # noqa: E731
             lpns, ops = place(lpns), place(ops)
             arr = place(arr) if arr is not None else None
             knobs = jax.tree_util.tree_map(place, knobs)
-            states = _sweep_sharded_jit(cfg, lpns, ops, has_writes, knobs,
-                                        arr, mesh)
-        pending.append((group, cfg, states))
+            return _sweep_sharded_jit(cfg, lpns, ops, has_writes, knobs,
+                                      arr, mesh)
+
+        try:
+            states = _dispatch()
+        except Exception as e:  # retried with backoff in phase 2
+            warnings.warn(
+                f"dispatch of sweep group {geometry.POLICY_NAMES[pol]!r} "
+                f"failed ({e!r}); will retry",
+                stacklevel=2,
+            )
+            states = None
+        pending.append((group, cfg, states, _dispatch, None))
 
     # ---- phase 2: one batched device->host transfer per group, then
     # summarize on numpy leaves off the dispatch critical path ----
     results = []
-    for group, cfg, states in pending:
-        host = jax.device_get(states)  # blocks on this group only
+    failed = []
+    for group, cfg, states, redispatch, cached in pending:
+        if cached is not None:
+            results.extend(cached)
+            continue
+        name = geometry.POLICY_NAMES[group[0].policy]
+        host = None
+        last_err = None
+        delays = _retry_delays(max_retries, retry_backoff_s)
+        for attempt in range(max_retries + 1):
+            try:
+                if states is None:  # prior dispatch/fetch failed -> redo
+                    states = redispatch()
+                host = jax.device_get(states)  # blocks on this group only
+                break
+            except Exception as e:  # one poisoned group must not lose the grid
+                last_err = e
+                states = None
+                if attempt < max_retries:
+                    warnings.warn(
+                        f"sweep group {name!r} failed ({e!r}); retry "
+                        f"{attempt + 1}/{max_retries} in "
+                        f"{delays[attempt]:.1f}s",
+                        stacklevel=2,
+                    )
+                    time.sleep(delays[attempt])
+        if host is None:
+            failed.append((name, last_err))
+            continue
+        group_results = []
         for i, r in enumerate(group):  # pads (indices >= len(group)) dropped
             m = engine.summarize(_take_run(host, i), cfg, threads=threads)
             m["run"] = dict(
@@ -331,10 +493,31 @@ def run_sweep(spec: SweepSpec, threads: int = 4, verbose: bool = False,
                 r1=r.r1,
                 r2_override=r.r2_override,
                 arrival_scale=r.arrival_scale,
+                prog_fail_rate=r.prog_fail_rate,
+                erase_fail_rate=r.erase_fail_rate,
+                max_read_retries=r.max_read_retries,
+                fault_seed=r.fault_seed,
                 n_requests=spec.n_requests,
                 tag=r.tag(),
             )
-            results.append(m)
+            group_results.append(m)
+        if resume_dir is not None:
+            _write_group_checkpoint(
+                _group_ckpt_path(resume_dir, spec, group[0].policy),
+                [r.tag() for r in group], spec, threads, group_results,
+            )
+        results.extend(group_results)
+    if failed:
+        names = ", ".join(n for n, _ in failed)
+        hint = (
+            "completed groups were checkpointed to resume_dir and are "
+            "reused on rerun" if resume_dir is not None else
+            "pass resume_dir= to checkpoint completed groups across reruns"
+        )
+        raise RuntimeError(
+            f"sweep group(s) failed after {max_retries} retries: {names} "
+            f"({hint})"
+        ) from failed[0][1]
     return results
 
 
@@ -359,6 +542,11 @@ _ROW_UNITS = {
     "erases": "erases",
     "reads": "reads",
     "writes": "writes",
+    "uncorrectable_reads": "reads",
+    "prog_fails": "failures",
+    "erase_fails": "failures",
+    "dropped_writes": "writes",
+    "bad_blocks": "blocks",
     "obs_events_total": "events",
     "obs_events_dropped": "events",
 }

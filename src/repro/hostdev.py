@@ -10,15 +10,34 @@ entry points that offer ``--fake-devices`` (``benchmarks/sweep_bench.py``,
 from __future__ import annotations
 
 import os
+import warnings
 
 
 def fake_host_devices(n: int | None) -> None:
     """Make the CPU backend present ``n`` host devices (no-op for falsy
     ``n``). Call before anything imports jax; appending wins over an earlier
     ``--xla_force_host_platform_device_count`` in ``XLA_FLAGS`` because XLA
-    resolves duplicate flags last-wins."""
-    if n:
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={int(n)}"
-        ).strip()
+    resolves duplicate flags last-wins.
+
+    Asking for more fake devices than the host has cores oversubscribes the
+    CPU (XLA pins one thread pool per device) and can look like a hang on
+    small runners, so the count is clamped to ``os.cpu_count()`` with a
+    warning instead of being passed through silently."""
+    if not n:
+        return
+    n = int(n)
+    if n < 1:
+        raise ValueError(f"fake device count must be >= 1, got {n}")
+    cores = os.cpu_count() or 1
+    if n > cores:
+        warnings.warn(
+            f"requested {n} fake host devices but the host has {cores} "
+            f"cores; clamping to {cores} (oversubscribed XLA host devices "
+            f"thrash rather than parallelize)",
+            stacklevel=2,
+        )
+        n = cores
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n}"
+    ).strip()

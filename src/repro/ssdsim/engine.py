@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import faults as flt
 from repro.core import hotness, modes, reclaim, retry
 from repro.ssdsim import ftl, geometry, obs, policies, telemetry
 from repro.ssdsim import state as st
@@ -173,7 +174,7 @@ def write_path_reference(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig
 
 
 def write_path_batched(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig,
-                       w_lat_us=None):
+                       w_lat_us=None, faults: flt.FaultParams | None = None):
     """Vectorized user-write path (DESIGN.md §2A).
 
     The chunk's writes are grouped by LUN and assigned destination slots with
@@ -187,6 +188,19 @@ def write_path_batched(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig,
     ``w_lat_us`` optionally overrides the per-lane latency recorded in the
     write histogram (the open-loop engine passes queueing-inclusive sojourn
     times); the default is the closed-loop QLC program + transfer constant.
+
+    With ``faults`` active (DESIGN.md §2D), each program draws a
+    deterministic failure keyed on (slot, block P/E). A failed program
+    wastes its slot (programmed-but-invalid, reclaimed by GC like any stale
+    page) and the page data — still in the controller buffer — is re-placed
+    through :func:`ftl._place_pages` onto a fresh block, where the program
+    is verified-good (real firmware program-verifies the retry target). The
+    superseded pre-chunk mapping is invalidated either way: if both the
+    program *and* its re-placement fail (free pool exhausted under
+    retirement pressure), the write is dropped and counted in
+    ``n_dropped_writes`` rather than corrupting the mapping; dropped writes
+    still occupy their LUN for a program time, so the queue stalls and the
+    Lindley clocks advance instead of the device absorbing infinite load.
     """
     spb = cfg.slots_per_block
     ppb_q = int(geometry.pages_per_block_host(cfg)[modes.QLC])
@@ -249,28 +263,42 @@ def write_path_batched(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig,
     db = jnp.maximum(dest_blk, 0)
     slot = db * spb + off
 
-    # duplicate LPNs within the chunk: only the last successful write maps;
-    # earlier ones still consume slots and are immediately invalid
+    # program-failure draw (DESIGN.md §2D): a failed lane still consumes its
+    # slot (programmed-but-invalid) but never maps; its data is re-placed
+    # below after the scatters commit
+    if faults is not None:
+        pfail = ok & flt.prog_fails(faults, slot, s.block_pe[db])
+    else:
+        pfail = jnp.zeros_like(ok)
+
+    # duplicate LPNs within the chunk: only the last attempted write
+    # supersedes the mapping; earlier ones still consume slots and are
+    # immediately invalid
     last_pos = (
         jnp.full((L,), -1, jnp.int32)
         .at[jnp.where(ok, lp, L)]
         .max(pos_i, mode="drop")
     )
     is_last = ok & (last_pos[lp] == pos_i)
+    mapped = is_last & ~pfail  # last attempt actually decoded into its slot
+    refail = is_last & pfail  # last attempt failed -> re-place the data
 
-    # invalidate pre-chunk mappings, once per unique written LPN
+    # invalidate pre-chunk mappings, once per unique written LPN: the new
+    # write supersedes the old data even when its program failed (the fresh
+    # copy lives in the controller buffer until re-placed)
     old = s.l2p[lp]
     inv = is_last & (old >= 0)
     old_safe = jnp.maximum(old, 0)
 
-    l2p = s.l2p.at[jnp.where(is_last, lp, L)].set(slot, mode="drop")
-    p2l = s.p2l.at[jnp.where(ok, slot, S)].set(jnp.where(is_last, lp, -1), mode="drop")
+    l2p = s.l2p.at[jnp.where(mapped, lp, L)].set(slot, mode="drop")
+    l2p = l2p.at[jnp.where(refail, lp, L)].set(-1, mode="drop")
+    p2l = s.p2l.at[jnp.where(ok, slot, S)].set(jnp.where(mapped, lp, -1), mode="drop")
     p2l = p2l.at[jnp.where(inv, old, S)].set(-1, mode="drop")
     pwt = s.page_write_ms.at[jnp.where(ok, slot, S)].set(s.clock_ms, mode="drop")
 
     oki = ok.astype(jnp.int32)
     bn_add = jax.ops.segment_sum(oki, db, num_segments=B)
-    bv_add = jax.ops.segment_sum(is_last.astype(jnp.int32), db, num_segments=B)
+    bv_add = jax.ops.segment_sum(mapped.astype(jnp.int32), db, num_segments=B)
     bv_sub = jax.ops.segment_sum(inv.astype(jnp.int32), old_safe // spb, num_segments=B)
     block_next = s.block_next + bn_add
     block_valid = s.block_valid + bv_add - bv_sub
@@ -295,7 +323,16 @@ def write_path_batched(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig,
         w_lat_us = jnp.full(
             (C,), modes.WRITE_LATENCY_US[modes.QLC] + cfg.transfer_us, jnp.float32
         )
-    return s._replace(
+    busy_luns = okc * (modes.WRITE_LATENCY_US[modes.QLC] / 1000.0)
+    if faults is not None:
+        # graceful degradation: allocation-exhausted writes (retirement
+        # pressure emptied the pool) stall their LUN for a program time so
+        # the queue backs up instead of the device absorbing infinite load
+        drop_alloc = w & ~ok
+        busy_luns = busy_luns + jax.ops.segment_sum(
+            drop_alloc.astype(jnp.float32), lun, num_segments=nL
+        ) * (modes.WRITE_LATENCY_US[modes.QLC] / 1000.0)
+    s = s._replace(
         l2p=l2p,
         p2l=p2l,
         page_write_ms=pwt,
@@ -303,11 +340,22 @@ def write_path_batched(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig,
         block_valid=block_valid,
         block_state=block_state,
         open_user=open_user,
-        lun_busy_ms=s.lun_busy_ms
-        + okc * (modes.WRITE_LATENCY_US[modes.QLC] / 1000.0),
+        lun_busy_ms=s.lun_busy_ms + busy_luns,
         n_writes=s.n_writes + ok.sum().astype(jnp.float32),
         w_lat_hist=telemetry.record(s.w_lat_hist, w_lat_us, ok),
     )
+    if faults is not None:
+        # re-place the data of failed last-attempt programs onto fresh
+        # block(s); anything _place_pages could not seat (pool exhausted) is
+        # a dropped write — counted, never a corrupted mapping
+        s = s._replace(
+            n_prog_fails=s.n_prog_fails + pfail.sum().astype(jnp.float32)
+        )
+        s = ftl._place_pages(s, lp, refail, modes.QLC, cfg, -(-C // ppb_q) + 1)
+        still = refail & (s.l2p[lp] < 0)
+        n_drop = (drop_alloc.sum() + still.sum()).astype(jnp.float32)
+        s = s._replace(n_dropped_writes=s.n_dropped_writes + n_drop)
+    return s
 
 
 def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
@@ -319,11 +367,28 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
     lpns, ops = req[0], req[1]
     arrival = req[2] if len(req) == 3 else None
     is_read = ops == OP_READ
+    fp = flt.params_for(cfg, knobs)  # None = no fault ops traced at all
 
     # ---------------- reads (vectorized) ----------------
     slot, blk, mode, retries, ok = lookup(s, lpns, cfg)
     rd = is_read & ok
     svc_us = jnp.where(rd, retry.read_latency_us(mode, retries), 0.0)
+    if fp is not None:
+        # uncorrectable reads (DESIGN.md §2D): over-budget retry estimates
+        # do not decode on-chip — burn the budget, then pay the ECC
+        # soft-decode/recovery penalty. retries collapses to the budget
+        # actually spent so the retry stats stay truthful.
+        mrr = fp.max_read_retries
+        uncorr = rd & (mrr >= 0) & (retries > mrr)
+        retries = jnp.where(uncorr, jnp.maximum(mrr, 0), retries)
+        svc_us = jnp.where(
+            rd,
+            retry.read_latency_us(mode, retries)
+            + jnp.where(uncorr, jnp.float32(fp.read_recovery_us), 0.0),
+            0.0,
+        )
+    else:
+        uncorr = None
     xfer_us = jnp.where(rd, cfg.transfer_us, 0.0)
     lun = blk % cfg.n_luns
     chan = lun % cfg.n_channels
@@ -379,6 +444,10 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
         n_retries=s.n_retries + chunk_retries,
         lat_hist=s.lat_hist + chunk_hist,
     )
+    if uncorr is not None:
+        s = s._replace(
+            n_uncorrectable=s.n_uncorrectable + uncorr.sum().astype(jnp.float32)
+        )
 
     # ---------------- observability: read-path attribution ----------------
     if obs.enabled(cfg):
@@ -397,7 +466,7 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
         s = obs.record_reads(
             s, cfg, mode=mode, rd=rd, lat_us=lat_us, queue_us=q_us,
             sense_us=base_us, retry_us=svc_us - base_us, xfer_us=xfer_us,
-            retries=retries, t_ms=t_read_ms,
+            retries=retries, t_ms=t_read_ms, uncorr=uncorr,
         )
         obs0 = (s.n_writes, s.n_conversions.sum(), s.n_erases,
                 s.n_migrated_pages)
@@ -414,6 +483,7 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
         s = write_path_batched(
             s, lpns, ops == OP_WRITE, cfg,
             w_lat_us=rec_lat_us if arrival is not None else None,
+            faults=fp,
         )
         chunk_w_hist = s.w_lat_hist - w_hist0
     else:
@@ -442,7 +512,7 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
             cfg, uniq, mode_u, retr_u, heat_u, ok_u, s.block_pe[blk_u], knobs=knobs
         )
         for tgt in (modes.SLC, modes.TLC):
-            s = ftl.maybe_migrate_pages(s, sel[tgt], tgt, cfg)
+            s = ftl.maybe_migrate_pages(s, sel[tgt], tgt, cfg, faults=fp)
 
         # ---------------- elastic capacity recovery ----------------
         if cfg.reclaim_enabled:
@@ -481,14 +551,15 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
                 victims, v_ok, v_tgt = reclaim.select_demotion_victims(
                     eligible_mode, block_heat, s.block_cold_age, free_frac, rcfg
                 )
-                return ftl.reclaim_victims(s, victims, v_ok, v_tgt, cfg)
+                return ftl.reclaim_victims(s, victims, v_ok, v_tgt, cfg,
+                                           faults=fp)
 
             s = lax.cond(
                 free_frac < rcfg.low_watermark, _reclaim_pass, lambda s_: s_, s
             )
 
     # ---------------- GC (fused multi-victim, deficit-aware) ----------------
-    s = ftl.gc_step(s, cfg)
+    s = ftl.gc_step(s, cfg, faults=fp)
 
     # clock follows the busiest LUN (device saturated under FIO load)
     s = s._replace(clock_ms=jnp.maximum(s.clock_ms, s.lun_busy_ms.max()))
@@ -620,5 +691,12 @@ def summarize(s: st.SSDState, cfg: geometry.SimConfig, threads: int = 4):
         conversions=np.asarray(s.n_conversions).tolist(),
         reads=n_reads,
         writes=float(s.n_writes),
+        # fault / recovery accounting (DESIGN.md §2D); all exactly 0.0 when
+        # fault injection is off
+        uncorrectable_reads=float(s.n_uncorrectable),
+        prog_fails=float(s.n_prog_fails),
+        erase_fails=float(s.n_erase_fails),
+        dropped_writes=float(s.n_dropped_writes),
+        bad_blocks=float(s.bad_count),
         **obs.summary(s, cfg),
     )

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import faults as flt
 from repro.core import modes, reclaim, retry
 from repro.ssdsim import geometry, obs, state as st
 
@@ -81,7 +82,8 @@ def free_block_count(s: st.SSDState):
     return s.free_count
 
 
-def _erase_many(s: st.SSDState, victims, grp, cfg: geometry.SimConfig):
+def _erase_many(s: st.SSDState, victims, grp, cfg: geometry.SimConfig,
+                faults: flt.FaultParams | None = None):
     """Erase every ``grp``-masked victim block in one vectorized pass:
     masked per-victim slot-window clears for ``p2l``, masked per-block
     scatters reset the block metadata, a ``segment_sum`` books per-LUN
@@ -96,6 +98,15 @@ def _erase_many(s: st.SSDState, victims, grp, cfg: geometry.SimConfig):
     than one K*spb-index scatter: each victim's slots are contiguous, and
     on XLA:CPU a slice memcpy beats the general per-element scatter by ~4x
     (a masked-out lane writes its current window back, a no-op).
+
+    With ``faults`` active (DESIGN.md §2D), each attempted erase draws a
+    deterministic failure keyed on (block, P/E): a failed block is retired
+    to ``BAD`` / ``block_bad`` instead of returning to the free pool — it
+    never becomes an allocation hint, never counts toward ``free_count``,
+    and ``alloc_free_block`` skips it forever (the scan only matches
+    ``FREE``). The erase latency and P/E bump are still paid (the op was
+    attempted) and the slot/metadata clears still run, so a retired block
+    carries no mapped pages — exactly what ``check_invariants`` asserts.
     """
     spb = cfg.slots_per_block
     B = s.block_mode.shape[0]
@@ -111,24 +122,51 @@ def _erase_many(s: st.SSDState, victims, grp, cfg: geometry.SimConfig):
     lun = vb % cfg.n_luns
     erase_ms = jnp.where(grp, modes.ERASE_LATENCY_US[s.block_mode[vb]] / 1000.0, 0.0)
     lun_erase = jax.ops.segment_sum(erase_ms, lun, num_segments=cfg.n_luns)
-    # any erased block on the LUN is a valid allocation hint; take the max id
+    if faults is not None:
+        fail = grp & flt.erase_fails(faults, vb, s.block_pe[vb])
+    else:
+        fail = jnp.zeros_like(grp)
+    freed = grp & ~fail
+    # any *freed* block on the LUN is a valid allocation hint; take the max
+    # id (retired blocks must never become hints)
     hint_cand = jax.ops.segment_max(
-        jnp.where(grp, vb, -1), lun, num_segments=cfg.n_luns
+        jnp.where(freed, vb, -1), lun, num_segments=cfg.n_luns
     )
-    n = grp.sum().astype(jnp.int32)
-    return s._replace(
+    n_free = freed.sum().astype(jnp.int32)
+    n_fail = fail.sum().astype(jnp.int32)
+    src_mode = s.block_mode[vb]
+    s = s._replace(
         p2l=p2l,
         block_pe=s.block_pe.at[bdrop].add(1, mode="drop"),
         block_reads=s.block_reads.at[bdrop].set(0, mode="drop"),
-        block_state=s.block_state.at[bdrop].set(st.FREE, mode="drop"),
+        block_state=s.block_state.at[bdrop].set(
+            jnp.where(fail, st.BAD, st.FREE).astype(s.block_state.dtype),
+            mode="drop",
+        ),
         block_next=s.block_next.at[bdrop].set(0, mode="drop"),
         block_valid=s.block_valid.at[bdrop].set(0, mode="drop"),
         block_cold_age=s.block_cold_age.at[bdrop].set(0, mode="drop"),
-        free_count=s.free_count + n,
+        block_bad=s.block_bad.at[jnp.where(fail, vb, B)].set(True, mode="drop"),
+        bad_count=s.bad_count + n_fail,
+        free_count=s.free_count + n_free,
         free_hint=jnp.where(hint_cand >= 0, hint_cand.astype(jnp.int32), s.free_hint),
         lun_busy_ms=s.lun_busy_ms + lun_erase,
-        n_erases=s.n_erases + n.astype(jnp.float32),
+        n_erases=s.n_erases + grp.sum().astype(jnp.float32),
+        n_erase_fails=s.n_erase_fails + n_fail.astype(jnp.float32),
     )
+    if faults is not None and obs.full(cfg):
+        zeros = jnp.zeros(vb.shape, jnp.float32)
+        s = obs.record_events(
+            s, cfg,
+            mask=fail,
+            block=vb,
+            from_mode=src_mode,
+            to_mode=src_mode,
+            reason=obs.REASON_BAD_BLOCK,
+            retry_est=zeros,
+            pages=zeros,
+        )
+    return s
 
 
 def _erase(s: st.SSDState, blk, cfg: geometry.SimConfig):
@@ -224,7 +262,8 @@ def _place_pages(s: st.SSDState, lpns, valid, tgt_mode, cfg: geometry.SimConfig,
     )
 
 
-def migrate_block(s: st.SSDState, src, tgt_mode, cfg: geometry.SimConfig):
+def migrate_block(s: st.SSDState, src, tgt_mode, cfg: geometry.SimConfig,
+                  faults: flt.FaultParams | None = None):
     """Move all valid pages of ``src`` into open migration block(s) of
     ``tgt_mode``, then erase ``src``. This is both mode conversion
     (tgt != src mode) and GC relocation (tgt == src mode) — a K=1 call into
@@ -237,7 +276,8 @@ def migrate_block(s: st.SSDState, src, tgt_mode, cfg: geometry.SimConfig):
     """
     victims = jnp.asarray(src, jnp.int32).reshape((1,))
     return relocate_group(s, victims, jnp.ones((1,), bool), tgt_mode, cfg,
-                          MAX_DEST, reason=obs.REASON_CONV_BLOCK)
+                          MAX_DEST, reason=obs.REASON_CONV_BLOCK,
+                          faults=faults)
 
 
 def _migrate_block_reference(s: st.SSDState, src, tgt_mode, cfg: geometry.SimConfig):
@@ -281,13 +321,16 @@ def _dest_unroll(cfg: geometry.SimConfig, n_pages: int) -> int:
     return -(-n_pages // slc_ppb) + 1
 
 
-def migrate_pages(s: st.SSDState, lpns, tgt_mode, cfg: geometry.SimConfig):
+def migrate_pages(s: st.SSDState, lpns, tgt_mode, cfg: geometry.SimConfig,
+                  faults: flt.FaultParams | None = None):
     """Page-granular conversion migration (paper Fig. 9/10): move the given
     logical pages into open block(s) programmed in ``tgt_mode``, invalidating
     their old slots. The destination block is the unit of mode uniformity
     ("flash type alignment"); source blocks are compacted later by GC.
 
     ``lpns``: (M,) int32, -1-padded. M is static (cfg.migrate_pages_per_chunk).
+    With ``faults`` active, over-budget migration reads pay the ECC recovery
+    penalty and count as uncorrectable (same model as :func:`relocate_group`).
     """
     spb = cfg.slots_per_block
     S = cfg.n_slots
@@ -306,7 +349,18 @@ def migrate_pages(s: st.SSDState, lpns, tgt_mode, cfg: geometry.SimConfig):
     # -- read cost of sources (each page is re-read to migrate) --
     age_h = cfg.device_age_h + (s.clock_ms - s.page_write_ms[old_slot]) / 3.6e6
     retries = retry.page_retries(src_mode, s.block_pe[src_blk], age_h, s.block_reads[src_blk], old_slot)
-    rd_ms = jnp.where(valid, retry.read_latency_us(src_mode, retries), 0.0) / 1000.0
+    lat_us = retry.read_latency_us(src_mode, retries)
+    if faults is not None:
+        mrr = faults.max_read_retries
+        uncorr = valid & (mrr >= 0) & (retries > mrr)
+        lat_us = retry.read_latency_us(
+            src_mode, jnp.where(uncorr, jnp.maximum(mrr, 0), retries)
+        ) + jnp.where(uncorr, jnp.float32(faults.read_recovery_us), 0.0)
+        s = s._replace(
+            n_uncorrectable=s.n_uncorrectable
+            + uncorr.sum().astype(jnp.float32)
+        )
+    rd_ms = jnp.where(valid, lat_us, 0.0) / 1000.0
     lun_rd = jax.ops.segment_sum(rd_ms, src_blk % cfg.n_luns, num_segments=cfg.n_luns)
     s = s._replace(lun_busy_ms=s.lun_busy_ms + lun_rd)
 
@@ -344,12 +398,13 @@ def migrate_pages(s: st.SSDState, lpns, tgt_mode, cfg: geometry.SimConfig):
     return s
 
 
-def maybe_migrate_pages(s: st.SSDState, lpns, tgt_mode, cfg: geometry.SimConfig):
+def maybe_migrate_pages(s: st.SSDState, lpns, tgt_mode, cfg: geometry.SimConfig,
+                        faults: flt.FaultParams | None = None):
     any_valid = (lpns >= 0).any()
     ok = any_valid & (free_block_count(s) >= _dest_unroll(cfg, lpns.shape[0]) + 2)
     return lax.cond(
         ok,
-        lambda s_: migrate_pages(s_, lpns, tgt_mode, cfg),
+        lambda s_: migrate_pages(s_, lpns, tgt_mode, cfg, faults),
         lambda s_: s_,
         s,
     )
@@ -366,7 +421,8 @@ def _demote_dest_unroll(cfg: geometry.SimConfig, tgt_mode: int, n_victims: int) 
 
 def relocate_group(s: st.SSDState, victims, grp, tgt_mode,
                    cfg: geometry.SimConfig, n_dest: int,
-                   reason: int = obs.REASON_CONV_BLOCK):
+                   reason: int = obs.REASON_CONV_BLOCK,
+                   faults: flt.FaultParams | None = None):
     """The fused relocation kernel (DESIGN.md §2A): migrate every
     ``grp``-masked victim block into ``tgt_mode`` in one placement pass,
     then erase all victims in one vectorized :func:`_erase_many`.
@@ -378,6 +434,15 @@ def relocate_group(s: st.SSDState, victims, grp, tgt_mode,
     the per-victim observability events (DESIGN.md §7.4) with the trigger
     that fired the pass; the scalar reference paths do not record events,
     so the fused-vs-reference bit-identity tests run at ``obs_level="off"``.
+
+    With ``faults`` active, migration reads whose Eq.-3 retry count exceeds
+    the retry budget are uncorrectable: they burn the budget, pay the ECC
+    recovery penalty and count into ``n_uncorrectable`` (the relocated copy
+    is the soft-decoded data — migration itself still succeeds), and the
+    victim erases can retire blocks (see :func:`_erase_many`). Migration
+    programs are modeled as verified-good: re-placing a failed migration
+    program would recurse into placement, and the recovery path it would
+    exercise is already covered by the user write path's re-placement.
     """
     spb = cfg.slots_per_block
 
@@ -392,7 +457,18 @@ def relocate_group(s: st.SSDState, victims, grp, tgt_mode,
     retries = retry.page_retries(
         src_mode[:, None], s.block_pe[vb][:, None], age_h, s.block_reads[vb][:, None], slots
     )
-    rd_ms = jnp.where(valid, retry.read_latency_us(src_mode[:, None], retries), 0.0).sum(1) / 1000.0
+    lat_us = retry.read_latency_us(src_mode[:, None], retries)
+    if faults is not None:
+        mrr = faults.max_read_retries
+        uncorr = valid & (mrr >= 0) & (retries > mrr)
+        lat_us = retry.read_latency_us(
+            src_mode[:, None], jnp.where(uncorr, jnp.maximum(mrr, 0), retries)
+        ) + jnp.where(uncorr, jnp.float32(faults.read_recovery_us), 0.0)
+        s = s._replace(
+            n_uncorrectable=s.n_uncorrectable
+            + uncorr.sum().astype(jnp.float32)
+        )
+    rd_ms = jnp.where(valid, lat_us, 0.0).sum(1) / 1000.0
     lun_rd = jax.ops.segment_sum(
         jnp.where(grp, rd_ms, 0.0), vb % cfg.n_luns, num_segments=cfg.n_luns
     )
@@ -421,10 +497,11 @@ def relocate_group(s: st.SSDState, victims, grp, tgt_mode,
             retry_est=retry_mean,
             pages=pages,
         )
-    return _erase_many(s, victims, grp, cfg)
+    return _erase_many(s, victims, grp, cfg, faults=faults)
 
 
-def reclaim_victims(s: st.SSDState, victims, v_ok, v_tgt, cfg: geometry.SimConfig):
+def reclaim_victims(s: st.SSDState, victims, v_ok, v_tgt, cfg: geometry.SimConfig,
+                    faults: flt.FaultParams | None = None):
     """Fused reclaim demotion (paper §IV-E): the top-k victims selected by
     ``reclaim.select_demotion_victims`` are migrated in at most two masked
     passes (one per demotion target, SLC->TLC and TLC->QLC) instead of K
@@ -438,7 +515,7 @@ def reclaim_victims(s: st.SSDState, victims, v_ok, v_tgt, cfg: geometry.SimConfi
             ok,
             lambda s_, grp=grp, tgt=tgt: relocate_group(
                 s_, victims, grp, tgt, cfg, _demote_dest_unroll(cfg, tgt, K),
-                reason=obs.REASON_RECLAIM,
+                reason=obs.REASON_RECLAIM, faults=faults,
             ),
             lambda s_: s_,
             s,
@@ -468,7 +545,8 @@ def select_gc_victims(s: st.SSDState, cfg: geometry.SimConfig, k: int):
     return reclaim.topk_victims(-s.block_valid.astype(jnp.float32), reclaimable, k)
 
 
-def gc_step(s: st.SSDState, cfg: geometry.SimConfig):
+def gc_step(s: st.SSDState, cfg: geometry.SimConfig,
+            faults: flt.FaultParams | None = None):
     """Fused greedy GC, cond-gated on the free-pool watermark: with a
     healthy pool the victim scan is skipped entirely, so GC can never fire
     above ``cfg.gc_free_threshold``. Under pressure one firing relocates up
@@ -476,10 +554,11 @@ def gc_step(s: st.SSDState, cfg: geometry.SimConfig):
     amortizing the full-device top-k, the placement unroll and the per-chunk
     dispatch over k blocks."""
     need = free_block_count(s) < cfg.gc_free_threshold
-    return lax.cond(need, lambda s_: _gc_pass(s_, cfg), lambda s_: s_, s)
+    return lax.cond(need, lambda s_: _gc_pass(s_, cfg, faults), lambda s_: s_, s)
 
 
-def _gc_pass(s: st.SSDState, cfg: geometry.SimConfig):
+def _gc_pass(s: st.SSDState, cfg: geometry.SimConfig,
+             faults: flt.FaultParams | None = None):
     """One fused GC firing: top-k min-valid victims relocated in a single
     masked :func:`relocate_group` pass over the batch's dominant source
     mode (GC keeps each block's mode), cond-gated on having victims and
@@ -528,7 +607,7 @@ def _gc_pass(s: st.SSDState, cfg: geometry.SimConfig):
     return lax.cond(
         go,
         lambda s_: relocate_group(s_, victims, grp, tgt, cfg, k + 1,
-                                  reason=obs.REASON_GC),
+                                  reason=obs.REASON_GC, faults=faults),
         lambda s_: s_,
         s,
     )

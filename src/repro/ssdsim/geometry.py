@@ -48,6 +48,19 @@ class SimConfig:
     obs_windows: int = 64  # time-series windows (last absorbs overflow)
     obs_window_ms: float = 50.0  # simulated time per window
 
+    # --- fault injection (DESIGN.md §2D) ---
+    # max_read_retries < 0: every read eventually decodes (the optimistic
+    # pre-fault model). >= 0: a read whose Eq.-3 retry count exceeds the
+    # budget is uncorrectable — it burns the budget, pays read_recovery_us
+    # of ECC soft-decode/recovery, and increments n_uncorrectable. Only
+    # budgets below the mode's retry-table limit (modes.MAX_RETRIES) can
+    # fire, since page_retries clips at the table.
+    max_read_retries: int = -1
+    read_recovery_us: float = 5000.0  # soft-decode / RAID-rebuild penalty
+    prog_fail_rate: float = 0.0  # per page program (user write path)
+    erase_fail_rate: float = 0.0  # per block erase -> bad-block retirement
+    fault_seed: int = 0  # stream selector for the deterministic draws
+
     # --- policy ---
     policy: int = RARO
     r1: int = 1
@@ -73,6 +86,14 @@ class SimConfig:
     @property
     def page_bytes(self) -> int:
         return self.page_kib * 1024
+
+    @property
+    def faults_enabled(self) -> bool:
+        """Static trace-time gate: any fault class configured on the config
+        itself. (The sweep runner can also activate faults per run through
+        traced ``RunKnobs`` fields — see ``repro.core.faults.params_for``.)"""
+        return (self.max_read_retries >= 0 or self.prog_fail_rate > 0.0
+                or self.erase_fail_rate > 0.0)
 
     @property
     def transfer_us(self) -> float:

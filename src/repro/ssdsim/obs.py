@@ -86,7 +86,9 @@ REASON_CONV_PAGE = 0  # policy-triggered page-granular conversion (Fig. 11)
 REASON_GC = 1  # fused multi-victim GC relocation
 REASON_RECLAIM = 2  # elastic capacity recovery demotion (paper §IV-E)
 REASON_CONV_BLOCK = 3  # direct block conversion (ftl.migrate_block API)
-REASON_NAMES = ("conversion", "gc", "reclaim", "block_conversion")
+REASON_BAD_BLOCK = 4  # erase failure -> bad-block retirement (DESIGN.md §2D)
+REASON_NAMES = ("conversion", "gc", "reclaim", "block_conversion",
+                "bad_block_retire")
 
 # time-series rows
 TS_READS = 0
@@ -96,10 +98,11 @@ TS_WRITES = 3
 TS_CONVERSIONS = 4  # n_conversions increments (pages for page-granular ops)
 TS_ERASES = 5
 TS_MIGRATED = 6
-N_SERIES = 7
+TS_UNCORR = 7  # uncorrectable reads (ECC recovery events, DESIGN.md §2D)
+N_SERIES = 8
 SERIES_NAMES = (
     "reads", "retries", "queue_ms", "writes", "conversions", "erases",
-    "migrated_pages",
+    "migrated_pages", "uncorrectable",
 )
 
 
@@ -150,13 +153,15 @@ def _window_of(cfg: geometry.SimConfig, t_ms):
 
 
 def record_reads(s, cfg: geometry.SimConfig, *, mode, rd, lat_us, queue_us,
-                 sense_us, retry_us, xfer_us, retries, t_ms):
+                 sense_us, retry_us, xfer_us, retries, t_ms, uncorr=None):
     """Per-read instruments for one chunk (engine read path).
 
     ``mode``/``lat_us``/... are per-lane arrays; ``rd`` masks user reads;
     ``t_ms`` is the per-lane sim time used for windowing (departure time
-    open-loop, the chunk clock closed-loop). Masked-out lanes are dropped
-    via out-of-range indices — the repo-wide scatter discipline.
+    open-loop, the chunk clock closed-loop). ``uncorr`` (optional bool
+    lanes, fault injection on) feeds the uncorrectable-read series.
+    Masked-out lanes are dropped via out-of-range indices — the repo-wide
+    scatter discipline.
     """
     if not enabled(cfg):
         return s
@@ -178,6 +183,10 @@ def record_reads(s, cfg: geometry.SimConfig, *, mode, rd, lat_us, queue_us,
     ts = ts.at[w, TS_QUEUE_MS].add(
         jnp.asarray(queue_us, jnp.float32) / 1000.0, mode="drop"
     )
+    if uncorr is not None:
+        ts = ts.at[w, TS_UNCORR].add(
+            jnp.asarray(uncorr, jnp.float32), mode="drop"
+        )
     s = s._replace(obs_lat_mode=lat_mode, obs_ts=ts)
 
     if not full(cfg):

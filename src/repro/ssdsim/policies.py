@@ -38,6 +38,15 @@ class RunKnobs(NamedTuple):
     # IOPS of the same trace. None (not a pytree leaf) or 1.0 replays the
     # trace's own timeline; ignored entirely for closed-loop traces.
     arrival_scale: jnp.ndarray | None = None
+    # fault-injection axis (DESIGN.md §2D): all four are set together (see
+    # ``faults.params_for``) or all left None, which keeps the fault ops out
+    # of the trace entirely. Traced rates of exactly 0.0 (with
+    # max_read_retries = -1) reproduce the fault-free outputs bit for bit,
+    # so a sweep can mix fault-free and faulty runs in one compiled program.
+    prog_fail_rate: jnp.ndarray | None = None
+    erase_fail_rate: jnp.ndarray | None = None
+    max_read_retries: jnp.ndarray | None = None
+    fault_seed: jnp.ndarray | None = None
 
 
 def thresholds_for(cfg: geometry.SimConfig, pe_cycles, knobs: RunKnobs | None = None):

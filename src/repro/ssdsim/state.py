@@ -17,6 +17,9 @@ from repro.ssdsim import geometry, obs, telemetry
 FREE = 0
 OPEN = 1
 FULL = 2
+# Retired: the block failed an erase and left service permanently
+# (DESIGN.md §2D). Never FREE again, never allocated, zero capacity.
+BAD = 3
 
 
 class SSDState(NamedTuple):
@@ -33,6 +36,15 @@ class SSDState(NamedTuple):
     block_next: jnp.ndarray  # (B,) int32 next free offset
     block_valid: jnp.ndarray  # (B,) int32 valid page count
     block_cold_age: jnp.ndarray  # (B,) int32 epochs since any hot/warm access
+    # grown bad-block map (DESIGN.md §2D): True iff the block failed an
+    # erase and was retired (block_state == BAD, by invariant). A separate
+    # leaf so factory bad blocks / host-visible retirement lists have a
+    # stable home independent of the state machine.
+    block_bad: jnp.ndarray  # (B,) bool
+
+    # retirement accounting (exact, maintained by ftl._erase_many like
+    # free_count; invariant: bad_count == (block_state == BAD).sum())
+    bad_count: jnp.ndarray  # int32 scalar — retired blocks
 
     # heat (logical)
     heat: jnp.ndarray  # (L,) float32
@@ -82,6 +94,13 @@ class SSDState(NamedTuple):
     n_migrated_pages: jnp.ndarray
     n_erases: jnp.ndarray
     n_conversions: jnp.ndarray  # (3,3) from-mode x to-mode counts
+    # fault/recovery counters (DESIGN.md §2D; all stay exactly 0.0 on the
+    # fault-free path, which the zero-fault equivalence test pins)
+    n_uncorrectable: jnp.ndarray  # reads past the retry budget (ECC recovery)
+    n_prog_fails: jnp.ndarray  # failed page programs (re-placed)
+    n_erase_fails: jnp.ndarray  # failed erases (block retired)
+    n_dropped_writes: jnp.ndarray  # writes/re-placements lost to allocation
+    #   exhaustion under retirement pressure (the stalled-queue path)
 
 
 def init_state(cfg: geometry.SimConfig, initial_pe=None) -> SSDState:
@@ -129,6 +148,8 @@ def init_state(cfg: geometry.SimConfig, initial_pe=None) -> SSDState:
         block_next=block_next,
         block_valid=block_valid,
         block_cold_age=jnp.zeros((B,), jnp.int32),
+        block_bad=jnp.zeros((B,), bool),
+        bad_count=jnp.int32(0),
         heat=jnp.zeros((L,), jnp.float32),
         open_user=jnp.full((cfg.n_luns,), -1, jnp.int32),
         open_mig=jnp.full((3,), -1, jnp.int32),
@@ -149,6 +170,10 @@ def init_state(cfg: geometry.SimConfig, initial_pe=None) -> SSDState:
         n_migrated_pages=jnp.float32(0.0),
         n_erases=jnp.float32(0.0),
         n_conversions=jnp.zeros((3, 3), jnp.float32),
+        n_uncorrectable=jnp.float32(0.0),
+        n_prog_fails=jnp.float32(0.0),
+        n_erase_fails=jnp.float32(0.0),
+        n_dropped_writes=jnp.float32(0.0),
     )
 
 
@@ -190,13 +215,21 @@ def check_invariants(s: SSDState, cfg: geometry.SimConfig, where: str = "") -> N
     bs = np.asarray(s.block_state)
     bn = np.asarray(s.block_next)
     assert ((bm >= 0) & (bm < modes.N_MODES)).all(), f"block_mode range{tag}"
-    assert ((bs >= FREE) & (bs <= FULL)).all(), f"block_state range{tag}"
+    assert ((bs >= FREE) & (bs <= BAD)).all(), f"block_state range{tag}"
     ppb = geometry.pages_per_block_host(cfg)
     nonfree = bs != FREE
     assert (bn[nonfree] <= ppb[bm[nonfree]]).all(), f"block_next > pages{tag}"
     assert (bn >= bv).all(), f"valid pages exceed programmed pages{tag}"
     assert (bn[bs == FREE] == 0).all() and (bv[bs == FREE] == 0).all(), \
         f"FREE block with programmed/valid pages{tag}"
+
+    # -- bad-block accounting (DESIGN.md §2D) --
+    bad = np.asarray(s.block_bad)
+    assert (bad == (bs == BAD)).all(), f"block_bad / block_state BAD mismatch{tag}"
+    assert int(s.bad_count) == int(bad.sum()), \
+        f"bad_count {int(s.bad_count)} != recount {int(bad.sum())}{tag}"
+    assert (bn[bad] == 0).all() and (bv[bad] == 0).all(), \
+        f"retired block with programmed/valid pages{tag}"
     # valid slots sit inside the programmed window of their block
     assert (vslots % spb < bn[vslots // spb]).all(), \
         f"valid slot past block_next{tag}"
@@ -237,6 +270,8 @@ def usable_capacity_pages(state: SSDState, cfg: geometry.SimConfig, xp=jnp):
         ppb[modes.QLC],
         ppb[state.block_mode],
     )
+    # retired blocks (erase failure, DESIGN.md §2D) left service for good
+    per_block = xp.where(state.block_state == BAD, 0, per_block)
     return per_block.sum()
 
 

@@ -134,9 +134,11 @@ class TestGateMain:
         rows = doc["tiny_baseline"]["rows"]
         assert doc["tiny_baseline"]["config"]["tiny"] is True
         names = [r[0] for r in rows if r[0].endswith("/chunks_per_sec")]
-        assert len(names) == 3
-        # the guarded set includes the fused-GC pressure section
+        assert len(names) == 4
+        # the guarded set includes the fused-GC pressure section and the
+        # armed fault-injection path
         assert "engine/gc_pressure/chunks_per_sec" in names
+        assert "engine/mixed_faults/chunks_per_sec" in names
 
     def test_markdown_render(self):
         md = render_markdown(gate(_doc(), _doc()), 0.5, 0.8)

@@ -1,0 +1,343 @@
+"""Fault-injection and recovery tests (DESIGN.md §2D).
+
+Three things are pinned here:
+
+  1. Bit-identity of the no-fault path — the fault subsystem must be free
+     when off, both statically (no fault ops traced) and for a *traced*
+     zero-rate run sharing a compiled program with faulty runs.
+  2. Each fault class actually fires and recovers correctly: uncorrectable
+     reads pay the ECC penalty, failed programs re-place through the normal
+     allocator, failed erases retire blocks into the bad-block map — and
+     ``state.check_invariants`` holds throughout (mapping bijection, free
+     counts, bad-block accounting).
+  3. Sweep robustness: checkpointed groups resume deterministically
+     (killed-then-resumed == uninterrupted, bit for bit) and stale
+     checkpoints are ignored rather than trusted.
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+from hyp_fallback import given, settings
+from hyp_fallback import st as st_h
+
+from repro.core import faults
+from repro.experiments import sweep
+from repro.ssdsim import engine, geometry, state as st, workload
+
+TINY = geometry.tiny_config()
+
+
+def _mixed(cfg, n=4_096, seed=1, read_frac=0.7, write_theta=None):
+    return workload.mixed_trace(cfg, n, 1.2, read_frac=read_frac, seed=seed,
+                                write_theta=write_theta)
+
+
+# --------------------------- parameter plumbing ----------------------------
+
+
+class TestParams:
+    def test_defaults_are_statically_off(self):
+        assert not TINY.faults_enabled
+        assert faults.params_for(TINY) is None
+        # knobs without fault fields don't arm the model either
+        from repro.ssdsim import policies
+        k = policies.RunKnobs(r1=1, r2_override=-1, initial_pe=500)
+        assert faults.params_for(TINY, k) is None
+
+    def test_config_path_arms(self):
+        cfg = geometry.tiny_config(prog_fail_rate=0.1)
+        assert cfg.faults_enabled
+        p = faults.params_for(cfg)
+        assert float(p.prog_fail_rate) == pytest.approx(0.1)
+        assert int(p.max_read_retries) == -1
+
+    def test_knobs_path_wins_over_config(self):
+        from repro.ssdsim import policies
+        cfg = geometry.tiny_config(prog_fail_rate=0.1)
+        k = policies.RunKnobs(
+            r1=1, r2_override=-1, initial_pe=500,
+            prog_fail_rate=np.float32(0.25), erase_fail_rate=np.float32(0.0),
+            max_read_retries=np.int32(4), fault_seed=np.int32(7),
+        )
+        p = faults.params_for(cfg, k)
+        assert float(p.prog_fail_rate) == pytest.approx(0.25)
+        assert int(p.max_read_retries) == 4
+
+    def test_draws_uniform_deterministic_and_stream_separated(self):
+        ids = np.arange(4_096, dtype=np.int32)
+        pe = np.full_like(ids, 500)
+        u1 = np.asarray(faults.uniform01(ids, pe, 1, faults.STREAM_PROG))
+        u2 = np.asarray(faults.uniform01(ids, pe, 1, faults.STREAM_PROG))
+        ue = np.asarray(faults.uniform01(ids, pe, 1, faults.STREAM_ERASE))
+        assert ((u1 > 0.0) & (u1 < 1.0)).all()
+        np.testing.assert_array_equal(u1, u2)  # stateless + reproducible
+        assert (u1 != ue).mean() > 0.99  # PROG and ERASE never share a draw
+        # roughly uniform: each decile within a few points of 10%
+        hist, _ = np.histogram(u1, bins=10, range=(0.0, 1.0))
+        assert (np.abs(hist / len(u1) - 0.1) < 0.03).all()
+
+
+# ------------------------- no-fault bit identity ---------------------------
+
+
+class TestZeroFaultBitIdentity:
+    def test_traced_zero_rates_match_knob_free_program(self):
+        """The fault ops traced into the sweep program (rates 0.0, budget
+        -1) must reproduce the knob-free program's summaries bit for bit —
+        the property that lets one compiled grid mix fault-free and faulty
+        runs."""
+        base = dict(
+            scenario="write_burst_then_read", n_requests=2_048,
+            policies=(geometry.BASELINE, geometry.RARO),
+            initial_pe=(833,), seeds=(0,), base=TINY,
+        )
+        plain = sweep.run_sweep(sweep.SweepSpec(**base))
+        # fault_seed != default flips faults_on() -> the fault ops are
+        # traced and the knobs ride the batch, but no draw can fire
+        armed = sweep.run_sweep(sweep.SweepSpec(**base, fault_seed=(1,)))
+        assert len(plain) == len(armed)
+        for a, b in zip(plain, armed):
+            assert a["run"]["policy"] == b["run"]["policy"]
+            for key, val in a.items():
+                if key == "run":
+                    continue
+                np.testing.assert_array_equal(
+                    np.asarray(val), np.asarray(b[key]),
+                    err_msg=f"summary key {key!r} diverged with zero-rate "
+                            f"fault knobs traced in",
+                )
+
+    def test_fault_counters_zero_when_off(self):
+        s, _ = engine.run(TINY, _mixed(TINY))
+        for leaf in (s.n_uncorrectable, s.n_prog_fails, s.n_erase_fails,
+                     s.n_dropped_writes, s.bad_count):
+            assert float(leaf) == 0.0
+
+
+# ------------------------- the three fault classes -------------------------
+
+
+class TestUncorrectableReads:
+    @pytest.fixture(scope="class")
+    def runs(self):
+        mk = lambda **kw: geometry.tiny_config(  # noqa: E731
+            policy=geometry.BASELINE, initial_pe=900, **kw)
+        cfg = mk(max_read_retries=2, fault_seed=1)
+        tr = workload.zipf_read_trace(cfg, 8_192, 1.2, seed=1)
+        s, _ = engine.run(cfg, tr)
+        s0, _ = engine.run(mk(), tr)  # same trace, unlimited retries
+        return cfg, s, s0
+
+    def test_uncorrectables_fire_and_invariants_hold(self, runs):
+        cfg, s, _ = runs
+        assert float(s.n_uncorrectable) > 0
+        st.check_invariants(s, cfg)
+
+    def test_recovery_penalty_shows_in_latency(self, runs):
+        cfg, s, s0 = runs
+        assert float(s.n_reads) == float(s0.n_reads)  # no read is dropped
+        mean = float(s.svc_sum_ms) / float(s.n_reads)
+        mean0 = float(s0.svc_sum_ms) / float(s0.n_reads)
+        # worn QLC at pe=900 retries far past a budget of 2: most reads pay
+        # the 5 ms recovery penalty (partly offset by the collapsed retries)
+        assert mean > 2.0 * mean0
+
+    def test_budget_collapses_retry_count(self, runs):
+        cfg, s, s0 = runs
+        # an uncorrectable read burns exactly the budget, never more
+        assert float(s.n_retries) < float(s0.n_retries)
+
+
+class TestProgramFailures:
+    @pytest.fixture(scope="class")
+    def runs(self):
+        cfg = geometry.tiny_config(policy=geometry.BASELINE, initial_pe=500,
+                                   prog_fail_rate=0.05, fault_seed=1)
+        tr = _mixed(cfg)
+        s, _ = engine.run(cfg, tr)
+        s0, _ = engine.run(geometry.tiny_config(
+            policy=geometry.BASELINE, initial_pe=500), tr)
+        return cfg, s, s0
+
+    def test_prog_fails_fire_and_invariants_hold(self, runs):
+        cfg, s, _ = runs
+        assert float(s.n_prog_fails) > 0
+        st.check_invariants(s, cfg)
+
+    def test_failed_programs_are_replaced_not_lost(self, runs):
+        cfg, s, s0 = runs
+        # every write the fault-free run completed still completes: the
+        # failed page re-places through ftl._place_pages onto a fresh block
+        assert float(s.n_writes) == float(s0.n_writes)
+        assert float(s.n_dropped_writes) == 0.0
+        assert (np.asarray(s.l2p) >= 0).all()
+
+
+class TestEraseFailures:
+    @pytest.fixture(scope="class")
+    def run(self):
+        # the engine-bench gc_pressure geometry: tiny free pool + write-heavy
+        # Zipf overwrites, so GC erases fire on nearly every chunk
+        cfg = geometry.tiny_config(
+            policy=geometry.BASELINE, initial_pe=500, n_logical=2_944,
+            gc_free_threshold=18, gc_victims_per_pass=4,
+            erase_fail_rate=0.1, fault_seed=1,
+        )
+        tr = _mixed(cfg, n=16_384, read_frac=0.1, write_theta=2.0)
+        s, _ = engine.run(cfg, tr)
+        return cfg, s
+
+    def test_blocks_retire_into_bad_map(self, run):
+        cfg, s = run
+        assert float(s.bad_count) > 0
+        bs = np.asarray(s.block_state)
+        bad = np.asarray(s.block_bad)
+        np.testing.assert_array_equal(bad, bs == st.BAD)
+        assert float(s.n_erase_fails) == float(s.bad_count)
+        # retired blocks hold nothing and are excluded from usable capacity
+        assert (np.asarray(s.block_valid)[bad] == 0).all()
+        st.check_invariants(s, cfg)
+
+    def test_erase_attempts_include_failures(self, run):
+        cfg, s = run
+        assert float(s.n_erases) > float(s.n_erase_fails)
+
+
+class TestGracefulDegradation:
+    def test_alloc_exhaustion_stalls_instead_of_corrupting(self):
+        # fault_storm shape on a worn tiny device: concentrated overwrites
+        # outrun the free pool, so some writes find no open slot. They must
+        # stall (counted in n_dropped_writes) and leave the state coherent.
+        cfg = geometry.tiny_config(
+            policy=geometry.BASELINE, initial_pe=900,
+            max_read_retries=6, erase_fail_rate=0.05, fault_seed=1,
+        )
+        tr = _mixed(cfg, read_frac=0.3, write_theta=2.0, seed=0)
+        s, _ = engine.run(cfg, tr)
+        assert float(s.n_dropped_writes) > 0
+        st.check_invariants(s, cfg)
+
+
+# --------------------- property test: random schedules ---------------------
+
+
+class TestFaultScheduleProperty:
+    R = 3  # static batch width -> one compile reused across examples
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        pfail=st_h.lists(st_h.floats(0.0, 0.3), min_size=R, max_size=R),
+        efail=st_h.lists(st_h.floats(0.0, 0.3), min_size=R, max_size=R),
+        mrr=st_h.lists(st_h.integers(-1, 8), min_size=R, max_size=R),
+        seed=st_h.integers(0, 2**16),
+    )
+    def test_random_fault_schedules_never_break_invariants(
+            self, pfail, efail, mrr, seed):
+        """Any mix of fault rates / retry budgets / seeds across a batched
+        run axis keeps every per-run state consistent: mapping bijection,
+        exact free counts, bad-block accounting."""
+        from repro.ssdsim import policies
+
+        cfg = geometry.tiny_config(policy=geometry.RARO)
+        tr = _mixed(cfg, n=2_048, read_frac=0.5, write_theta=2.0)
+        lpns = np.broadcast_to(np.asarray(tr["lpn"], np.int32),
+                               (self.R, *tr["lpn"].shape))
+        ops = np.broadcast_to(np.asarray(tr["op"], np.int32),
+                              (self.R, *tr["op"].shape))
+        knobs = policies.RunKnobs(
+            r1=np.full(self.R, cfg.r1, np.int32),
+            r2_override=np.full(self.R, -1, np.int32),
+            initial_pe=np.full(self.R, 833, np.int32),
+            prog_fail_rate=np.asarray(pfail, np.float32),
+            erase_fail_rate=np.asarray(efail, np.float32),
+            max_read_retries=np.asarray(mrr, np.int32),
+            fault_seed=np.asarray([seed + i for i in range(self.R)], np.int32),
+        )
+        states = sweep._sweep_jit(cfg, lpns, ops, True, knobs, None)
+        states = jax.device_get(states)
+        for i in range(self.R):
+            s = sweep._take_run(states, i)
+            st.check_invariants(s, cfg)
+            assert float(s.bad_count) == float(s.n_erase_fails)
+
+
+# ------------------------ checkpointed sweep resume ------------------------
+
+
+def _fault_spec(**kw):
+    d = dict(
+        scenario="fault_storm", n_requests=2_048,
+        policies=(geometry.BASELINE, geometry.RARO),
+        initial_pe=(900,), seeds=(0,),
+        prog_fail_rate=(0.0, 0.02), erase_fail_rate=(0.05,),
+        max_read_retries=(6,), base=TINY,
+    )
+    d.update(kw)
+    return sweep.SweepSpec(**d)
+
+
+class TestSweepResume:
+    @pytest.fixture(scope="class")
+    def baseline(self):
+        return sweep.run_sweep(_fault_spec())
+
+    def test_checkpointing_changes_nothing(self, baseline, tmp_path):
+        res = sweep.run_sweep(_fault_spec(), resume_dir=tmp_path)
+        sweep.assert_results_identical(baseline, res)
+        assert sorted(p.name for p in tmp_path.glob("ckpt_*.json")) == [
+            "ckpt_fault_storm_baseline.json", "ckpt_fault_storm_raro.json"]
+
+    def test_full_resume_is_identical(self, baseline, tmp_path):
+        spec = _fault_spec()
+        sweep.run_sweep(spec, resume_dir=tmp_path)
+        # every group cached: the rerun must not recompute anything and the
+        # merged results must match the uninterrupted run bit for bit
+        res = sweep.run_sweep(spec, resume_dir=tmp_path)
+        sweep.assert_results_identical(baseline, res)
+
+    def test_partial_resume_is_identical(self, baseline, tmp_path):
+        """Simulates a sweep killed after one policy group completed: only
+        the missing group reruns and the merged results are unchanged."""
+        spec = _fault_spec()
+        sweep.run_sweep(spec, resume_dir=tmp_path)
+        (tmp_path / "ckpt_fault_storm_raro.json").unlink()
+        res = sweep.run_sweep(spec, resume_dir=tmp_path)
+        sweep.assert_results_identical(baseline, res)
+
+    def test_stale_checkpoint_is_ignored(self, baseline, tmp_path):
+        spec = _fault_spec()
+        sweep.run_sweep(spec, resume_dir=tmp_path)
+        p = tmp_path / "ckpt_fault_storm_baseline.json"
+        doc = json.loads(p.read_text())
+        doc["n_requests"] = 999  # pretend it came from a different sweep
+        p.write_text(json.dumps(doc))
+        res = sweep.run_sweep(spec, resume_dir=tmp_path)
+        sweep.assert_results_identical(baseline, res)
+
+
+# ----------------------- device-count clamp satellites ---------------------
+
+
+class TestDeviceClamp:
+    def test_resolve_devices_clamps_and_warns(self):
+        avail = len(jax.devices())
+        with pytest.warns(UserWarning, match="clamping"):
+            devs = sweep.resolve_devices(avail + 99)
+        assert len(devs) == avail
+
+    def test_fake_host_devices_clamps_to_cores(self, monkeypatch):
+        import os
+
+        from repro import hostdev
+
+        monkeypatch.setattr(os, "cpu_count", lambda: 2)
+        monkeypatch.setenv("XLA_FLAGS", "")
+        with pytest.warns(UserWarning, match="clamping"):
+            hostdev.fake_host_devices(64)
+        assert os.environ["XLA_FLAGS"].endswith(
+            "--xla_force_host_platform_device_count=2")
+        with pytest.raises(ValueError):
+            hostdev.fake_host_devices(-3)

@@ -92,9 +92,12 @@ class TestShardedEquivalence:
         _assert_identical(res, sweep.run_sweep(spec, devices=2))
         assert any(r["read_queue_delay_us"] > 0 for r in res)
 
-    def test_too_many_devices_raises(self):
-        with pytest.raises(ValueError, match="device"):
-            sweep.run_sweep(_spec(), devices=N_DEV + 1)
+    def test_too_many_devices_clamps_with_warning(self):
+        # over-asking devices clamps to the visible count (with a warning)
+        # instead of aborting the sweep — results are unchanged
+        with pytest.warns(UserWarning, match="clamping"):
+            res = sweep.run_sweep(_spec(), devices=N_DEV + 1)
+        _assert_identical(res, sweep.run_sweep(_spec(), devices=N_DEV))
 
     def test_zero_devices_raises(self):
         with pytest.raises(ValueError, match="devices"):
