@@ -1,14 +1,17 @@
 """Engine-throughput benchmark (DESIGN.md §2A): chunks/sec for the simulator
-hot path, measured for read-only, mixed read/write, and GC-pressure traces.
+hot path, measured for read-only, mixed read/write, GC-pressure,
+fault-injection, and channel-contention traces.
 
 The paper's headline figures (13-18) come from mixed traces, so this script
 is the regression guard for the vectorized write path, the fused reclaim
-pass, and the fused multi-victim GC (the ``gc_pressure`` section runs a
+pass, the fused multi-victim GC (the ``gc_pressure`` section runs a
 write-heavy trace against a nearly-full device so GC fires on virtually
-every chunk): it reports steady-state chunks/sec and wall-clock per chunk
-(compile excluded, measured separately) and emits a ``BENCH_engine.json``
-artifact in the same ``name,value,unit`` row format as the rest of the
-harness.
+every chunk), the armed fault path (``mixed_faults``), and the lattice
+timing model's second Lindley pass (``channel_contention``: open-loop zipf
+reads funneling 4 dies into 1 channel under ``chan_model="lattice"``): it
+reports steady-state chunks/sec and wall-clock per chunk (compile excluded,
+measured separately) and emits a ``BENCH_engine.json`` artifact in the same
+``name,value,unit`` row format as the rest of the harness.
 
   PYTHONPATH=src python -m benchmarks.engine_bench [--tiny] [--repeats N]
       [--out DIR]
@@ -39,6 +42,12 @@ FAULT_MAX_READ_RETRIES = 6
 FAULT_PROG_FAIL_RATE = 0.01
 FAULT_ERASE_FAIL_RATE = 0.02
 FAULT_SEED = 1
+
+# channel_contention workload shape (DESIGN.md §2C): read-heavy open-loop
+# Zipf trace at an offered rate that keeps the one shared bus saturated, so
+# the section prices the lattice model's second Lindley pass
+CHAN_CONTENTION_RATE_IOPS = 30_000.0
+CHAN_CONTENTION_READ_THETA = 1.2
 
 
 def bench_config(tiny: bool):
@@ -95,6 +104,35 @@ def gc_pressure_config(tiny: bool):
     )
 
 
+def channel_contention_config(tiny: bool):
+    """Geometry for the ``channel_contention`` section: every die on one
+    channel (1 x 4) under ``chan_model="lattice"``, so page transfers from
+    four concurrently-sensing dies serialize on a single bus. BASELINE
+    policy keeps the section a pure pricing of the two-resource tandem
+    recursion (no conversion/GC work in the loop)."""
+    from repro.ssdsim import geometry
+
+    if tiny:
+        return geometry.tiny_config(
+            n_channels=1, luns_per_channel=4, policy=geometry.BASELINE,
+            initial_pe=500, chan_model="lattice",
+        )
+    return geometry.SimConfig(
+        n_channels=1,
+        luns_per_channel=4,
+        blocks_per_plane=64,
+        slots_per_block=256,
+        n_logical=32_768,
+        chunk=512,
+        migrate_pages_per_chunk=64,
+        max_conversions_per_chunk=4,
+        gc_free_threshold=4,
+        policy=geometry.BASELINE,
+        initial_pe=500,
+        chan_model="lattice",
+    )
+
+
 def _sections(tiny: bool, n_requests: int):
     """name -> (cfg, trace, has_writes). ``gc_pressure`` runs a write-heavy
     mixed trace with Zipf-skewed overwrites (concentrated invalidation makes
@@ -105,6 +143,7 @@ def _sections(tiny: bool, n_requests: int):
 
     cfg = bench_config(tiny)
     gc_cfg = gc_pressure_config(tiny)
+    cc_cfg = channel_contention_config(tiny)
     mixed_trace = workload.mixed_trace(cfg, n_requests, 1.2, read_frac=0.7,
                                        seed=1)
     # same geometry + trace as ``mixed`` with every instrument on: the pair
@@ -133,6 +172,12 @@ def _sections(tiny: bool, n_requests: int):
                                  read_frac=GC_PRESSURE_READ_FRAC,
                                  write_theta=GC_PRESSURE_WRITE_THETA),
             True),
+        "channel_contention": (
+            cc_cfg,
+            workload.zipf_read_trace(
+                cc_cfg, n_requests, CHAN_CONTENTION_READ_THETA, seed=1,
+                arrival_rate=CHAN_CONTENTION_RATE_IOPS),
+            False),
     }
 
 
@@ -176,14 +221,22 @@ def bench_engine(tiny: bool, n_requests: int, repeats: int, profile_dir=None):
         n_chunks = lpns.shape[0]
 
         t0 = time.perf_counter()
-        compiled = engine._run_jit.lower(cfg, lpns, ops, has_writes).compile()
+        if "arrival_ms" in trace:  # open-loop section (arrival model)
+            arr = jnp.asarray(trace["arrival_ms"], jnp.float32)
+            compiled = engine._run_open_jit.lower(
+                cfg, lpns, ops, arr, has_writes).compile()
+            run = lambda: compiled(lpns, ops, arr)  # noqa: E731
+        else:
+            compiled = engine._run_jit.lower(cfg, lpns, ops,
+                                             has_writes).compile()
+            run = lambda: compiled(lpns, ops)  # noqa: E731
         compile_s = time.perf_counter() - t0
 
-        jax.block_until_ready(compiled(lpns, ops))  # warm-up / page in
+        jax.block_until_ready(run())  # warm-up / page in
         with _profiler(profile_dir, wl):
             t0 = time.perf_counter()
             for _ in range(repeats):
-                jax.block_until_ready(compiled(lpns, ops))
+                jax.block_until_ready(run())
             dt = (time.perf_counter() - t0) / repeats
 
         yield f"engine/{wl}/compile_s", compile_s, "s"
@@ -209,6 +262,7 @@ def main() -> None:
 
     cfg = bench_config(args.tiny)
     gc_cfg = gc_pressure_config(args.tiny)
+    cc_cfg = channel_contention_config(args.tiny)
     n_requests = args.requests or (4 * cfg.chunk if args.tiny else 40 * cfg.chunk)
 
     profile_dir = None
@@ -247,6 +301,13 @@ def main() -> None:
                 "prog_fail_rate": FAULT_PROG_FAIL_RATE,
                 "erase_fail_rate": FAULT_ERASE_FAIL_RATE,
                 "fault_seed": FAULT_SEED,
+            },
+            "channel_contention": {
+                "n_channels": cc_cfg.n_channels,
+                "luns_per_channel": cc_cfg.luns_per_channel,
+                "chan_model": cc_cfg.chan_model,
+                "rate_iops": CHAN_CONTENTION_RATE_IOPS,
+                "theta": CHAN_CONTENTION_READ_THETA,
             },
         },
         "rows": rows,

@@ -4,12 +4,15 @@ curves from the open-loop arrival engine.
 A retry-heavy read-disturb trace is replayed open-loop at a Poisson base
 rate calibrated to the device's measured closed-loop throughput, then swept
 over offered-load multipliers (``RunKnobs.arrival_scale``) so every load
-point of a policy's curve runs in one compiled batch. The emitted
-``BENCH_latency.json`` carries, per policy and load point, offered IOPS,
-achieved IOPS, mean/p50/p99/p999 read latency and mean queueing delay —
-plus the closed-loop reference run, whose p99 the open-loop tail must
-exceed at high offered load (the queueing the closed-loop engine cannot
-see).
+point of a policy's curve runs in one compiled batch. Runs use the full
+``chan_model="lattice"`` resource model (die sense + shared channel bus),
+so the curves price transfer queueing on the ONFI channels as well as die
+occupancy — the knee sits left of where the legacy one-clock-per-LUN model
+put it at the same geometry. The emitted ``BENCH_latency.json`` carries,
+per policy and load point, offered IOPS, achieved IOPS, mean/p50/p99/p999
+read latency and mean queueing delay — plus the closed-loop reference run,
+whose p99 the open-loop tail must exceed at high offered load (the
+queueing the closed-loop engine cannot see).
 
   PYTHONPATH=src python -m benchmarks.latency_bench [--smoke] [--out DIR]
       [--requests N] [--scales 0.25,0.5,...]
@@ -89,6 +92,8 @@ def bench_latency(cfg, n_requests: int, scales, threads: int = 4):
 
 
 def main() -> None:
+    import dataclasses
+
     from benchmarks.engine_bench import bench_config
 
     ap = argparse.ArgumentParser()
@@ -101,7 +106,9 @@ def main() -> None:
                     help="directory for the BENCH_latency.json artifact")
     args = ap.parse_args()
 
-    cfg = bench_config(args.smoke)
+    # same geometry as engine_bench, but with the hierarchical timing
+    # lattice on so the curves include channel-bus queueing
+    cfg = dataclasses.replace(bench_config(args.smoke), chan_model="lattice")
     n_requests = args.requests or (4 * cfg.chunk if args.smoke else 40 * cfg.chunk)
     scales = (
         tuple(float(x) for x in args.scales.split(","))
@@ -127,6 +134,10 @@ def main() -> None:
             "n_requests": n_requests,
             "base_rate_iops": base_rate,
             "arrival_scales": list(scales),
+            "chan_model": cfg.chan_model,
+            "n_channels": cfg.n_channels,
+            "luns_per_channel": cfg.luns_per_channel,
+            "channel_mb_s": cfg.channel_mb_s,
         },
         "curves": curves,
         "rows": [list(r) for r in rows],

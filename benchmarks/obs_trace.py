@@ -2,8 +2,9 @@
 with every instrument on, decode the in-scan accumulators, and emit
 
 - ``trace_obs.json`` — Chrome trace-event JSON (load in ui.perfetto.dev or
-  ``chrome://tracing``): one track per LUN of relocation slices + counter
-  tracks for the windowed time series;
+  ``chrome://tracing``): one track per die of relocation slices, one bus
+  track per channel of companion transfer slices + counter tracks for the
+  windowed time series;
 - ``BENCH_obs.json`` — harness-style rows (per-mode p99 tail attribution,
   event totals) plus the full tail-attribution and conversion-event tables
   the report renderer formats.

@@ -117,6 +117,24 @@ def uniform01(ident, cycle, seed, stream):
     return (jnp.float32(h & jnp.uint32(0xFFFFFF)) + 0.5) / jnp.float32(1 << 24)
 
 
+def block_entity(block, n_dies: int, planes: int):
+    """Erase-fault entity of a block, keyed on its physical lattice
+    coordinates ``(die, plane, index-within-plane)`` rather than the raw
+    block id, so fault schedules are a property of the physical cell being
+    erased and survive renumberings that keep the lattice. Plain-int
+    arithmetic on purpose (no geometry import — core stays below ssdsim).
+
+    Under the die-first striped layout (``die = block % n_dies``, ``plane =
+    (block // n_dies) % planes``) the coordinates pack back to exactly the
+    raw block id — ``(idx * planes + plane) * n_dies + die == block`` — so
+    every existing draw is unchanged (pinned by ``tests/test_channel_model``).
+    """
+    die = block % n_dies
+    plane = (block // n_dies) % planes
+    idx = block // (n_dies * planes)
+    return (idx * planes + plane) * n_dies + die
+
+
 def prog_fails(p: FaultParams, slots, pe):
     """Per-lane program-failure draw for slots about to be programmed."""
     return uniform01(slots, pe, p.seed, STREAM_PROG) < p.prog_fail_rate

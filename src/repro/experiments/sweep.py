@@ -535,6 +535,7 @@ _ROW_UNITS = {
     "write_lat_p99_us": "us",
     "write_lat_p999_us": "us",
     "read_queue_delay_us": "us",
+    "read_chan_wait_us": "us",
     "retries_per_read": "retries",
     "capacity_gib": "GiB",
     "capacity_loss_gib": "GiB",

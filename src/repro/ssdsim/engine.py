@@ -18,11 +18,18 @@ Two timing models share the engine (DESIGN.md §2C):
   clock follows cumulative LUN busy time. The original behavior, bit-for-bit.
 
   open loop (trace with ``arrival_ms``) — each request has an arrival
-  timestamp; requests queue FCFS per LUN behind earlier requests and behind
+  timestamp; requests queue FCFS per die behind earlier requests and behind
   background FTL work (migrations/reclaim/GC/erase), and the recorded
-  latency adds the queueing delay: latency = (departure - arrival) +
-  transfer, with departure from a vectorized per-LUN Lindley recursion
-  (:func:`_queue_departures`) against the ``lun_avail_ms`` clocks.
+  latency adds the queueing delay, with departures from a vectorized
+  per-lane Lindley recursion (:func:`_queue_departures`) against the
+  ``die_avail_ms`` clocks. Under ``cfg.chan_model == "legacy"`` transfer is
+  appended to the recorded latency but never queues (the historical
+  one-clock-per-LUN model); under ``"lattice"`` the same recursion runs
+  twice as a two-resource tandem (:func:`_tandem_departures`) — die pass
+  for sense/program occupancy, then a channel pass where every page
+  transfer serializes on its die's channel bus against ``chan_avail_ms``,
+  so a read departs at max(die_free, chan_free_after_prior_transfers) +
+  sense + retries + xfer.
 """
 
 from __future__ import annotations
@@ -54,29 +61,34 @@ class ChunkMetrics(NamedTuple):
     lat_hist: jnp.ndarray  # (telemetry.N_LAT_BINS,) this chunk's read latencies
     w_lat_hist: jnp.ndarray  # (telemetry.N_LAT_BINS,) this chunk's write latencies
     q_ms: jnp.ndarray  # total read queueing delay this chunk (0 closed-loop)
+    chanq_ms: jnp.ndarray  # total read channel-wait this chunk (lattice only)
 
 
 def _queue_departures(avail0_ms, arrival_ms, occ_ms, lun, active, n_luns: int):
-    """Per-LUN FCFS departure times for one chunk (vectorized Lindley).
+    """Per-resource FCFS departure times for one chunk (vectorized Lindley).
 
-    The classic recursion per LUN, in request order,
+    ``lun`` assigns each lane to a resource column (a die's command queue,
+    or a channel bus in the lattice model's transfer pass). The classic
+    recursion per resource, in request order,
 
         start_k = max(A_k, D_{k-1});  D_k = start_k + S_k
 
-    closed-forms — with P_k the per-LUN inclusive prefix sum of service
-    times S and A_j the arrival times — to
+    closed-forms — with P_k the per-resource inclusive prefix sum of
+    service times S and A_j the arrival times — to
 
         D_k = P_k + max(avail0_lun, max_{j<=k}(A_j - P_{j-1}))
 
-    so one masked ``cumsum`` and one masked ``cummax`` per LUN column
-    replace a per-request scan. Inactive lanes neither occupy the LUN nor
-    constrain the max; a LUN with no requests this chunk keeps
-    ``avail0_lun``. Returns (per-lane departure times, final per-LUN
-    availability), both in ms.
+    so one masked ``cumsum`` and one masked ``cummax`` per resource column
+    replace a per-request scan. Arrivals need not be sorted: out-of-order
+    A_j simply serve in lane (request-admission) order, which is what the
+    tandem channel pass relies on. Inactive lanes neither occupy the
+    resource nor constrain the max; a resource with no requests this chunk
+    keeps ``avail0_lun``. Returns (per-lane departure times, final
+    per-resource availability), both in ms.
     """
     oh = (lun[:, None] == jnp.arange(n_luns, dtype=jnp.int32)[None, :]) & active[:, None]
     sv = jnp.where(oh, occ_ms[:, None], 0.0)
-    prefix = jnp.cumsum(sv, axis=0)  # (C, n_luns) inclusive per-LUN P_k
+    prefix = jnp.cumsum(sv, axis=0)  # (C, n_luns) inclusive per-lane P_k
     slack = jnp.where(oh, arrival_ms[:, None] - (prefix - sv), -jnp.inf)
     m = jnp.maximum(lax.cummax(slack, axis=0), avail0_ms[None, :])
     depart = prefix + m
@@ -84,6 +96,40 @@ def _queue_departures(avail0_ms, arrival_ms, occ_ms, lun, active, n_luns: int):
         depart, jnp.clip(lun, 0, n_luns - 1)[:, None], axis=1
     )[:, 0]
     return lane_dep, depart[-1]
+
+
+def _tandem_departures(die_avail0, chan_avail0, arrival_ms, die_occ_ms,
+                       xfer_ms, die, chan, rd, active, n_dies: int,
+                       n_channels: int):
+    """Two-resource tandem Lindley recursion (``chan_model="lattice"``).
+
+    Stage 1 — the die: every active request queues FCFS on its die for its
+    command occupancy (sense+retries for reads, page program for writes),
+    exactly the legacy recursion. Stage 2 — the channel bus: every request's
+    page transfer then queues FCFS on the die's channel for ``xfer_ms``. A
+    read's transfer becomes eligible when its sense finishes (the die-pass
+    departure: data sits in the page register, freeing the die — the
+    decoupling that keeps both passes closed-form); a write's transfer is
+    eligible at the request's arrival (the controller stages data to the
+    die over the bus before/while the die drains earlier work, so write
+    transfers contend for the bus without coupling the passes). The channel
+    serves transfers in request-admission order (FCFS per bus).
+
+    Returns ``(die_dep, chan_dep, die_avail, chan_avail)``: per-lane die
+    and channel departure times plus the final per-resource clocks. A read
+    departs the device at ``chan_dep`` = max(die_free,
+    chan_free_after_prior_transfers) + sense + retries + xfer; a write
+    departs the die at ``die_dep`` (its recorded latency appends the
+    transfer it already paid on admission).
+    """
+    die_dep, die_avail = _queue_departures(
+        die_avail0, arrival_ms, die_occ_ms, die, active, n_dies
+    )
+    chan_arr = jnp.where(rd, die_dep, arrival_ms)
+    chan_dep, chan_avail = _queue_departures(
+        chan_avail0, chan_arr, xfer_ms, chan, active, n_channels
+    )
+    return die_dep, chan_dep, die_avail, chan_avail
 
 
 def lookup(s: st.SSDState, lpns, cfg: geometry.SimConfig):
@@ -159,7 +205,7 @@ def write_path_reference(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig
                     jnp.where(ok & full, st.FULL, s.block_state.at[dd].get())
                 ),
                 open_user=s.open_user.at[lun].set(jnp.where(ok & ~full, d2, -1)),
-                lun_busy_ms=s.lun_busy_ms.at[lun].add(
+                die_busy_ms=s.die_busy_ms.at[lun].add(
                     jnp.where(ok, modes.WRITE_LATENCY_US[modes.QLC] / 1000.0, 0.0)
                 ),
                 n_writes=s.n_writes + jnp.where(ok, 1.0, 0.0),
@@ -340,7 +386,7 @@ def write_path_batched(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig,
         block_valid=block_valid,
         block_state=block_state,
         open_user=open_user,
-        lun_busy_ms=s.lun_busy_ms + busy_luns,
+        die_busy_ms=s.die_busy_ms + busy_luns,
         n_writes=s.n_writes + ok.sum().astype(jnp.float32),
         w_lat_hist=telemetry.record(s.w_lat_hist, w_lat_us, ok),
     )
@@ -390,8 +436,8 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
     else:
         uncorr = None
     xfer_us = jnp.where(rd, cfg.transfer_us, 0.0)
-    lun = blk % cfg.n_luns
-    chan = lun % cfg.n_channels
+    die = cfg.die_of_block(blk)
+    chan = cfg.channel_of_die(die)
 
     # ---------------- open-loop queueing (DESIGN.md §2C) ----------------
     if arrival is not None:
@@ -403,43 +449,72 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
         t_arr = arrival / scale  # scale multiplies the offered rate
         wv = (ops == OP_WRITE) & (lpns >= 0)
         active = rd | wv
-        q_lun = jnp.where(rd, lun, jnp.maximum(lpns, 0) % cfg.n_luns).astype(jnp.int32)
-        # LUN occupancy: sense+retries for reads, page program for writes —
-        # the same terms the closed-loop model books into lun_busy_ms.
-        # Channel transfer is appended to the recorded latency but does not
-        # occupy the LUN (it overlaps the next sense, as on real hardware).
+        q_die = jnp.where(rd, die, jnp.maximum(lpns, 0) % cfg.n_dies).astype(jnp.int32)
+        # die occupancy: sense+retries for reads, page program for writes —
+        # the same terms the closed-loop model books into die_busy_ms.
         occ_us = jnp.where(rd, svc_us, modes.WRITE_LATENCY_US[modes.QLC])
-        dep_ms, lun_avail = _queue_departures(
-            s.lun_avail_ms, t_arr, jnp.where(active, occ_us, 0.0) / 1000.0,
-            q_lun, active, cfg.n_luns,
-        )
-        sojourn_us = (dep_ms - t_arr) * 1000.0 + cfg.transfer_us
-        queue_us = jnp.maximum(sojourn_us - occ_us - cfg.transfer_us, 0.0)
-        rec_lat_us = sojourn_us  # queue + sense/retry (or program) + xfer
+        if cfg.chan_model == "lattice":
+            # two-resource tandem: sense/program queues on the die, then the
+            # page transfer queues on the die's channel bus
+            die_dep, chan_dep, die_avail, chan_avail = _tandem_departures(
+                s.die_avail_ms, s.chan_avail_ms, t_arr,
+                jnp.where(active, occ_us, 0.0) / 1000.0,
+                jnp.where(active, cfg.transfer_us, 0.0) / 1000.0,
+                q_die, cfg.channel_of_die(q_die), rd, active,
+                cfg.n_dies, cfg.n_channels,
+            )
+            dep_ms = jnp.where(rd, chan_dep, die_dep)
+            sojourn_us = jnp.where(
+                rd,
+                (chan_dep - t_arr) * 1000.0,
+                (die_dep - t_arr) * 1000.0 + cfg.transfer_us,
+            )
+            queue_us = jnp.maximum((die_dep - t_arr) * 1000.0 - occ_us, 0.0)
+            chanw_us = jnp.where(
+                rd,
+                jnp.maximum((chan_dep - die_dep) * 1000.0 - cfg.transfer_us,
+                            0.0),
+                0.0,
+            )
+        else:
+            # legacy: channel transfer is appended to the recorded latency
+            # but does not occupy a resource (it overlaps the next sense)
+            dep_ms, die_avail = _queue_departures(
+                s.die_avail_ms, t_arr, jnp.where(active, occ_us, 0.0) / 1000.0,
+                q_die, active, cfg.n_dies,
+            )
+            chan_avail = s.chan_avail_ms
+            sojourn_us = (dep_ms - t_arr) * 1000.0 + cfg.transfer_us
+            queue_us = jnp.maximum(sojourn_us - occ_us - cfg.transfer_us, 0.0)
+            chanw_us = jnp.zeros_like(queue_us)
+        rec_lat_us = sojourn_us  # queue + sense/retry (or program) + wait + xfer
         chunk_q = jnp.where(rd, queue_us, 0.0).sum() / 1000.0
+        chunk_chanw = jnp.where(rd, chanw_us, 0.0).sum() / 1000.0
         chunk_svc = jnp.where(rd, rec_lat_us, 0.0).sum() / 1000.0
         chunk_hist = telemetry.record(
             jnp.zeros((telemetry.N_LAT_BINS,), jnp.float32), rec_lat_us, rd
         )
     else:
         chunk_q = jnp.float32(0.0)
+        chunk_chanw = jnp.float32(0.0)
         chunk_svc = (svc_us + xfer_us).sum() / 1000.0
         chunk_hist = telemetry.record(
             jnp.zeros((telemetry.N_LAT_BINS,), jnp.float32), svc_us + xfer_us, rd
         )
 
-    lun_add = jax.ops.segment_sum(svc_us, lun, num_segments=cfg.n_luns) / 1000.0
+    die_add = jax.ops.segment_sum(svc_us, die, num_segments=cfg.n_dies) / 1000.0
     chan_add = jax.ops.segment_sum(xfer_us, chan, num_segments=cfg.n_channels) / 1000.0
     chunk_reads = rd.sum().astype(jnp.float32)
     chunk_retries = jnp.where(rd, retries, 0).sum().astype(jnp.float32)
 
     s = s._replace(
-        lun_busy_ms=s.lun_busy_ms + lun_add,
+        die_busy_ms=s.die_busy_ms + die_add,
         chan_busy_ms=s.chan_busy_ms + chan_add,
         block_reads=s.block_reads
         + jax.ops.segment_sum(rd.astype(jnp.int32), blk, num_segments=cfg.n_blocks),
         svc_sum_ms=s.svc_sum_ms + chunk_svc,
         q_sum_ms=s.q_sum_ms + chunk_q,
+        chanq_sum_ms=s.chanq_sum_ms + chunk_chanw,
         n_reads=s.n_reads + chunk_reads,
         n_retries=s.n_retries + chunk_retries,
         lat_hist=s.lat_hist + chunk_hist,
@@ -457,16 +532,18 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
         base_us = jnp.where(rd, modes.READ_LATENCY_US[mode], 0.0)
         if arrival is not None:
             q_us = jnp.where(rd, queue_us, 0.0)
+            cw_us = jnp.where(rd, chanw_us, 0.0)
             t_read_ms = dep_ms  # window by each read's own departure time
             lat_us = rec_lat_us
         else:
             q_us = jnp.zeros_like(svc_us)
+            cw_us = jnp.zeros_like(svc_us)
             t_read_ms = jnp.broadcast_to(s.clock_ms, svc_us.shape)
             lat_us = svc_us + xfer_us
         s = obs.record_reads(
             s, cfg, mode=mode, rd=rd, lat_us=lat_us, queue_us=q_us,
-            sense_us=base_us, retry_us=svc_us - base_us, xfer_us=xfer_us,
-            retries=retries, t_ms=t_read_ms, uncorr=uncorr,
+            sense_us=base_us, retry_us=svc_us - base_us, chanw_us=cw_us,
+            xfer_us=xfer_us, retries=retries, t_ms=t_read_ms, uncorr=uncorr,
         )
         obs0 = (s.n_writes, s.n_conversions.sum(), s.n_erases,
                 s.n_migrated_pages)
@@ -490,8 +567,8 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
         chunk_w_hist = jnp.zeros((telemetry.N_LAT_BINS,), jnp.float32)
 
     # background FTL work from here on (migrations/reclaim/GC) extends the
-    # LUN availability clocks: the next chunk's arrivals queue behind it
-    busy_mark = s.lun_busy_ms
+    # die availability clocks: the next chunk's arrivals queue behind it
+    busy_mark = s.die_busy_ms
 
     # ---------------- policy: conversion migrations ----------------
     if cfg.policy != geometry.BASELINE:
@@ -561,17 +638,20 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
     # ---------------- GC (fused multi-victim, deficit-aware) ----------------
     s = ftl.gc_step(s, cfg, faults=fp)
 
-    # clock follows the busiest LUN (device saturated under FIO load)
-    s = s._replace(clock_ms=jnp.maximum(s.clock_ms, s.lun_busy_ms.max()))
+    # clock follows the busiest die (device saturated under FIO load)
+    s = s._replace(clock_ms=jnp.maximum(s.clock_ms, s.die_busy_ms.max()))
 
     if arrival is not None:
         # block the next chunk's arrivals behind this chunk's background
         # work, and let wall time follow real arrivals (idle gaps age pages)
-        lun_avail = lun_avail + (s.lun_busy_ms - busy_mark)
+        die_avail = die_avail + (s.die_busy_ms - busy_mark)
         s = s._replace(
-            lun_avail_ms=lun_avail,
+            die_avail_ms=die_avail,
+            chan_avail_ms=chan_avail,
             clock_ms=jnp.maximum(
-                s.clock_ms, jnp.maximum(t_arr[-1], lun_avail.max())
+                s.clock_ms,
+                jnp.maximum(t_arr[-1],
+                            jnp.maximum(die_avail.max(), chan_avail.max())),
             ),
         )
 
@@ -600,6 +680,7 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
         lat_hist=chunk_hist,
         w_lat_hist=chunk_w_hist,
         q_ms=chunk_q,
+        chanq_ms=chunk_chanw,
     )
     return s, y
 
@@ -651,14 +732,15 @@ def summarize(s: st.SSDState, cfg: geometry.SimConfig, threads: int = 4):
     import numpy as np
 
     n_reads = float(s.n_reads)
-    # under the open-loop model elapsed time is the last LUN-availability
-    # clock (includes idle gaps); closed-loop lun_avail_ms stays 0 so the
-    # busy-time makespan is unchanged. Host-side numpy on purpose: the sweep
-    # runner hands this function device_get'ed numpy leaves and summarize
-    # must not enqueue device work behind them (DESIGN.md §7.3).
+    # under the open-loop model elapsed time is the last die- (or, lattice,
+    # channel-) availability clock (includes idle gaps); closed-loop
+    # die_avail_ms/chan_avail_ms stay 0 so the busy-time makespan is
+    # unchanged. Host-side numpy on purpose: the sweep runner hands this
+    # function device_get'ed numpy leaves and summarize must not enqueue
+    # device work behind them (DESIGN.md §7.3).
     makespan_ms = float(
-        max(np.max(s.lun_busy_ms), np.max(s.chan_busy_ms),
-            np.max(s.lun_avail_ms))
+        max(np.max(s.die_busy_ms), np.max(s.chan_busy_ms),
+            np.max(s.die_avail_ms), np.max(s.chan_avail_ms))
     )
     mean_lat_ms = float(s.svc_sum_ms) / max(n_reads, 1.0)
     if threads == 1:
@@ -683,6 +765,7 @@ def summarize(s: st.SSDState, cfg: geometry.SimConfig, threads: int = 4):
         write_lat_p99_us=wpct[0.99],
         write_lat_p999_us=wpct[0.999],
         read_queue_delay_us=float(s.q_sum_ms) / max(n_reads, 1.0) * 1000.0,
+        read_chan_wait_us=float(s.chanq_sum_ms) / max(n_reads, 1.0) * 1000.0,
         retries_per_read=float(s.n_retries) / max(n_reads, 1.0),
         capacity_gib=cap,
         capacity_loss_gib=init_cap - cap,

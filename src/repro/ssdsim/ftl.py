@@ -45,7 +45,7 @@ def _alloc_scan(s: st.SSDState, prefer_lun=None, cfg: geometry.SimConfig | None 
     free = s.block_state == st.FREE
     if prefer_lun is not None:
         blk = jnp.arange(s.block_mode.shape[0], dtype=jnp.int32)
-        lun_match = (blk % cfg.n_luns) == prefer_lun
+        lun_match = cfg.die_of_block(blk) == prefer_lun
         score = free.astype(jnp.int32) * 2 + (free & lun_match).astype(jnp.int32)
     else:
         score = free.astype(jnp.int32)
@@ -119,18 +119,30 @@ def _erase_many(s: st.SSDState, victims, grp, cfg: geometry.SimConfig,
         p2l = lax.dynamic_update_slice(
             p2l, jnp.where(grp[i], neg, cur), (vb[i] * spb,)
         )
-    lun = vb % cfg.n_luns
+    die = cfg.die_of_block(vb)
     erase_ms = jnp.where(grp, modes.ERASE_LATENCY_US[s.block_mode[vb]] / 1000.0, 0.0)
-    lun_erase = jax.ops.segment_sum(erase_ms, lun, num_segments=cfg.n_luns)
+    if cfg.chan_model == "lattice" and cfg.planes_per_lun > 1:
+        # multi-plane erase overlap: co-scheduled plane erases on one die
+        # pay the max of the per-plane times, not their sum
+        per_plane = jax.ops.segment_sum(
+            erase_ms, cfg.plane_slot_of_block(vb),
+            num_segments=cfg.n_dies * cfg.planes_per_die,
+        )
+        die_erase = per_plane.reshape(cfg.n_dies, cfg.planes_per_die).max(1)
+    else:
+        die_erase = jax.ops.segment_sum(erase_ms, die, num_segments=cfg.n_dies)
     if faults is not None:
-        fail = grp & flt.erase_fails(faults, vb, s.block_pe[vb])
+        fail = grp & flt.erase_fails(
+            faults, flt.block_entity(vb, cfg.n_dies, cfg.planes_per_die),
+            s.block_pe[vb],
+        )
     else:
         fail = jnp.zeros_like(grp)
     freed = grp & ~fail
-    # any *freed* block on the LUN is a valid allocation hint; take the max
+    # any *freed* block on the die is a valid allocation hint; take the max
     # id (retired blocks must never become hints)
     hint_cand = jax.ops.segment_max(
-        jnp.where(freed, vb, -1), lun, num_segments=cfg.n_luns
+        jnp.where(freed, vb, -1), die, num_segments=cfg.n_dies
     )
     n_free = freed.sum().astype(jnp.int32)
     n_fail = fail.sum().astype(jnp.int32)
@@ -150,7 +162,7 @@ def _erase_many(s: st.SSDState, victims, grp, cfg: geometry.SimConfig,
         bad_count=s.bad_count + n_fail,
         free_count=s.free_count + n_free,
         free_hint=jnp.where(hint_cand >= 0, hint_cand.astype(jnp.int32), s.free_hint),
-        lun_busy_ms=s.lun_busy_ms + lun_erase,
+        die_busy_ms=s.die_busy_ms + die_erase,
         n_erases=s.n_erases + grp.sum().astype(jnp.float32),
         n_erase_fails=s.n_erase_fails + n_fail.astype(jnp.float32),
     )
@@ -178,7 +190,7 @@ def _erase(s: st.SSDState, blk, cfg: geometry.SimConfig):
     spb = cfg.slots_per_block
     mode = s.block_mode[blk]
     p2l = lax.dynamic_update_slice(s.p2l, jnp.full((spb,), -1, jnp.int32), (blk * spb,))
-    lun = blk % cfg.n_luns
+    die = cfg.die_of_block(blk)
     erase_ms = modes.ERASE_LATENCY_US[mode] / 1000.0
     return s._replace(
         p2l=p2l,
@@ -189,8 +201,8 @@ def _erase(s: st.SSDState, blk, cfg: geometry.SimConfig):
         block_valid=s.block_valid.at[blk].set(0),
         block_cold_age=s.block_cold_age.at[blk].set(0),
         free_count=s.free_count + 1,
-        free_hint=s.free_hint.at[lun].set(blk.astype(jnp.int32)),
-        lun_busy_ms=s.lun_busy_ms.at[lun].add(erase_ms),
+        free_hint=s.free_hint.at[die].set(blk.astype(jnp.int32)),
+        die_busy_ms=s.die_busy_ms.at[die].add(erase_ms),
         n_erases=s.n_erases + 1.0,
     )
 
@@ -221,6 +233,13 @@ def _place_pages(s: st.SSDState, lpns, valid, tgt_mode, cfg: geometry.SimConfig,
     n_valid = valid.sum()
     consumed = jnp.int32(0)
     dest_slot = jnp.full(lpns.shape, S, jnp.int32)  # S = dropped
+    # lattice multi-plane overlap: defer the program charges and fold
+    # co-scheduled plane programs on one die to their max after the unroll
+    # (legacy — and any single-plane geometry — keeps the sequential
+    # per-iteration adds, preserving float association bit for bit)
+    overlap = cfg.chan_model == "lattice" and cfg.planes_per_lun > 1
+    prog_blocks: list = []
+    prog_ms: list = []
     for _ in range(n_dest):
         cur = s.open_mig[tgt_mode]
         fresh = cur < 0
@@ -236,6 +255,12 @@ def _place_pages(s: st.SSDState, lpns, valid, tgt_mode, cfg: geometry.SimConfig,
 
         write_ms = take * modes.WRITE_LATENCY_US[tgt_mode] / 1000.0
         is_full = start + take >= ppb[tgt_mode]
+        if overlap:
+            prog_blocks.append(dd)
+            prog_ms.append(write_ms)
+            busy = s.die_busy_ms
+        else:
+            busy = s.die_busy_ms.at[cfg.die_of_block(dd)].add(write_ms)
         s = s._replace(
             block_mode=s.block_mode.at[dd].set(
                 jnp.where(opened, tgt_mode, s.block_mode[dd])
@@ -250,9 +275,16 @@ def _place_pages(s: st.SSDState, lpns, valid, tgt_mode, cfg: geometry.SimConfig,
             open_mig=s.open_mig.at[tgt_mode].set(
                 jnp.where(opened, jnp.where(is_full, -1, d), s.open_mig[tgt_mode])
             ),
-            lun_busy_ms=s.lun_busy_ms.at[dd % cfg.n_luns].add(write_ms),
+            die_busy_ms=busy,
         )
         consumed = consumed + take
+    if overlap and prog_blocks:
+        per_plane = jax.ops.segment_sum(
+            jnp.stack(prog_ms), cfg.plane_slot_of_block(jnp.stack(prog_blocks)),
+            num_segments=cfg.n_dies * cfg.planes_per_die,
+        )
+        die_prog = per_plane.reshape(cfg.n_dies, cfg.planes_per_die).max(1)
+        s = s._replace(die_busy_ms=s.die_busy_ms + die_prog)
     placed = dest_slot < S
     lp_idx = jnp.where(placed, lpns, L)  # L = dropped
     return s._replace(
@@ -301,8 +333,8 @@ def _migrate_block_reference(s: st.SSDState, src, tgt_mode, cfg: geometry.SimCon
     )
     retries = retry.page_retries(src_mode, s.block_pe[src], age_h, s.block_reads[src], slots)
     read_ms = jnp.where(valid, retry.read_latency_us(src_mode, retries), 0.0).sum() / 1000.0
-    src_lun = src % cfg.n_luns
-    s = s._replace(lun_busy_ms=s.lun_busy_ms.at[src_lun].add(read_ms))
+    src_die = cfg.die_of_block(src)
+    s = s._replace(die_busy_ms=s.die_busy_ms.at[src_die].add(read_ms))
 
     # source slots die with the erase below; no explicit invalidation needed
     s = _place_pages(s, lpns, valid, tgt_mode, cfg, MAX_DEST)
@@ -361,8 +393,9 @@ def migrate_pages(s: st.SSDState, lpns, tgt_mode, cfg: geometry.SimConfig,
             + uncorr.sum().astype(jnp.float32)
         )
     rd_ms = jnp.where(valid, lat_us, 0.0) / 1000.0
-    lun_rd = jax.ops.segment_sum(rd_ms, src_blk % cfg.n_luns, num_segments=cfg.n_luns)
-    s = s._replace(lun_busy_ms=s.lun_busy_ms + lun_rd)
+    die_rd = jax.ops.segment_sum(rd_ms, cfg.die_of_block(src_blk),
+                                 num_segments=cfg.n_dies)
+    s = s._replace(die_busy_ms=s.die_busy_ms + die_rd)
 
     # -- invalidate old slots --
     drop_slot = jnp.where(valid, old_slot, S)
@@ -469,10 +502,20 @@ def relocate_group(s: st.SSDState, victims, grp, tgt_mode,
             + uncorr.sum().astype(jnp.float32)
         )
     rd_ms = jnp.where(valid, lat_us, 0.0).sum(1) / 1000.0
-    lun_rd = jax.ops.segment_sum(
-        jnp.where(grp, rd_ms, 0.0), vb % cfg.n_luns, num_segments=cfg.n_luns
-    )
-    s = s._replace(lun_busy_ms=s.lun_busy_ms + lun_rd)
+    rd_w = jnp.where(grp, rd_ms, 0.0)
+    if cfg.chan_model == "lattice" and cfg.planes_per_lun > 1:
+        # multi-plane relocation reads on one die overlap (optimistic
+        # cache-read model): co-scheduled plane victims pay the max of the
+        # per-plane read times, matching the erase/program overlap charges
+        per_plane = jax.ops.segment_sum(
+            rd_w, cfg.plane_slot_of_block(vb),
+            num_segments=cfg.n_dies * cfg.planes_per_die,
+        )
+        die_rd = per_plane.reshape(cfg.n_dies, cfg.planes_per_die).max(1)
+    else:
+        die_rd = jax.ops.segment_sum(rd_w, cfg.die_of_block(vb),
+                                     num_segments=cfg.n_dies)
+    s = s._replace(die_busy_ms=s.die_busy_ms + die_rd)
 
     s = _place_pages(s, lpns.reshape(-1), valid.reshape(-1), tgt_mode, cfg, n_dest)
 

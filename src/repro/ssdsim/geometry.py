@@ -1,8 +1,23 @@
 """Emulated-SSD geometry and simulation configuration (paper Table III).
 
-Default geometry: 2 channels x 2 LUNs/channel x 1 plane x 256 blocks/plane,
+Default geometry: 2 channels x 2 dies/channel x 1 plane x 256 blocks/plane,
 16 KiB pages, 256/768/1024 pages per SLC/TLC/QLC block -> 16 GiB raw QLC
 capacity; the paper's working set is 8 GiB (524,288 logical pages).
+
+Resource lattice (DESIGN.md §2C): timing resources form a
+``(channel, die, plane)`` hierarchy. A *die* (what ONFI calls a LUN) owns
+sense/program/erase occupancy; the *channel* bus it hangs off serializes
+page transfers across its dies; *planes* within a die can co-schedule
+program/erase and overlap. Block ids interleave die-first —
+``die = block % n_dies``, ``plane = (block // n_dies) % planes_per_lun`` —
+so consecutive blocks stripe across dies exactly like the historical
+``blk % n_luns`` LUN striping (``n_dies == n_luns``; the block -> die map is
+unchanged, which is what keeps the legacy timing model reachable
+bit-for-bit).
+
+``chan_model`` selects the timing model: ``"legacy"`` (default) is the
+one-clock-per-LUN scheduler — transfer never queues — and ``"lattice"``
+adds per-channel transfer clocks and multi-plane overlap.
 """
 
 from __future__ import annotations
@@ -10,6 +25,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 
 from repro.core import hotness, modes
+
+CHAN_MODELS = ("legacy", "lattice")
 
 BASELINE = 0  # multi-read-retry QLC, no mode awareness
 HOTNESS = 1  # temperature-only 3-mode conversion (paper's comparison)
@@ -38,6 +55,11 @@ class SimConfig:
     gc_victims_per_pass: int = 4  # blocks relocated per fused GC firing
     device_age_h: float = 100.0  # retention baseline (pre-aged device)
     channel_mb_s: float = 800.0  # ONFI channel bandwidth for page transfer
+    # timing model (DESIGN.md §2C): "legacy" = one opaque clock per LUN,
+    # transfer appended to latency but never queued (the historical model);
+    # "lattice" = two-resource (die, channel) tandem queue with per-channel
+    # transfer clocks and multi-plane program/erase overlap
+    chan_model: str = "legacy"
 
     # --- observability (DESIGN.md §7.4) ---
     # "off": no obs ops traced at all (zero-length accumulator leaves);
@@ -71,9 +93,27 @@ class SimConfig:
     # --- initial wear (paper evaluates young/middle/old devices) ---
     initial_pe: int = 166
 
+    def __post_init__(self):
+        if self.chan_model not in CHAN_MODELS:
+            raise ValueError(
+                f"chan_model must be one of {CHAN_MODELS}, "
+                f"got {self.chan_model!r}"
+            )
+
     @property
     def n_luns(self) -> int:
         return self.n_channels * self.luns_per_channel
+
+    @property
+    def n_dies(self) -> int:
+        """Dies in the device — one die per historical LUN (``n_dies ==
+        n_luns``; "LUN" is ONFI's name for a die, kept as the legacy
+        alias)."""
+        return self.n_channels * self.luns_per_channel
+
+    @property
+    def planes_per_die(self) -> int:
+        return self.planes_per_lun
 
     @property
     def n_blocks(self) -> int:
@@ -100,11 +140,36 @@ class SimConfig:
         """Channel transfer time of one page (16 KiB @ 800 MB/s ~= 20 us)."""
         return self.page_bytes / (self.channel_mb_s * 1e6) * 1e6
 
+    # --- lattice indexing (works on python ints and traced arrays) ---
+
+    def die_of_block(self, block):
+        """Owning die of a block: blocks stripe die-first, so consecutive
+        block ids land on consecutive dies (identical to the historical
+        ``blk % n_luns`` LUN striping)."""
+        return block % self.n_dies
+
+    def plane_of_block(self, block):
+        """Plane within its die: after the die stripe, blocks cycle through
+        the die's planes."""
+        return (block // self.n_dies) % self.planes_per_die
+
+    def channel_of_die(self, die):
+        """Channel bus a die hangs off (dies stripe across channels)."""
+        return die % self.n_channels
+
+    def plane_slot_of_block(self, block):
+        """Flattened ``die * planes_per_die + plane`` index — the segment id
+        for per-(die, plane) reductions (reshape to ``(n_dies, planes)``)."""
+        return self.die_of_block(block) * self.planes_per_die + \
+            self.plane_of_block(block)
+
     def lun_of_block(self, block):
-        return block % self.n_luns
+        """Legacy alias: the historical LUN of a block is its die."""
+        return self.die_of_block(block)
 
     def channel_of_lun(self, lun):
-        return lun % self.n_channels
+        """Legacy alias for :meth:`channel_of_die`."""
+        return self.channel_of_die(lun)
 
     def with_policy(self, policy: int) -> "SimConfig":
         return replace(self, policy=policy)

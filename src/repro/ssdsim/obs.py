@@ -62,13 +62,16 @@ from repro.ssdsim import geometry, telemetry
 LEVELS = ("off", "counters", "full")
 
 # latency components, in recorded-latency order: queueing delay behind the
-# LUN, the base sense, the extra senses bought by retries, channel transfer
+# die, the base sense, the extra senses bought by retries, the wait for the
+# channel bus (transfer queueing — nonzero only under the lattice model),
+# and the channel transfer service itself
 COMP_QUEUE = 0
 COMP_SENSE = 1
 COMP_RETRY = 2
-COMP_XFER = 3
-N_COMPONENTS = 4
-COMPONENT_NAMES = ("queue", "sense", "retry", "transfer")
+COMP_CHANWAIT = 3
+COMP_XFER = 4
+N_COMPONENTS = 5
+COMPONENT_NAMES = ("queue", "sense", "retry", "chan_wait", "transfer")
 
 # event record fields (one f32 row per event; ids/counts are small integers,
 # exact in f32, which keeps the ring a single dense array — one scatter)
@@ -153,12 +156,16 @@ def _window_of(cfg: geometry.SimConfig, t_ms):
 
 
 def record_reads(s, cfg: geometry.SimConfig, *, mode, rd, lat_us, queue_us,
-                 sense_us, retry_us, xfer_us, retries, t_ms, uncorr=None):
+                 sense_us, retry_us, chanw_us, xfer_us, retries, t_ms,
+                 uncorr=None):
     """Per-read instruments for one chunk (engine read path).
 
     ``mode``/``lat_us``/... are per-lane arrays; ``rd`` masks user reads;
     ``t_ms`` is the per-lane sim time used for windowing (departure time
-    open-loop, the chunk clock closed-loop). ``uncorr`` (optional bool
+    open-loop, the chunk clock closed-loop). ``chanw_us`` is the transfer
+    *queueing* behind the channel bus — split from the transfer service so
+    bus contention is attributable separately (zero under the legacy
+    channel model, where transfer never queues). ``uncorr`` (optional bool
     lanes, fault injection on) feeds the uncorrectable-read series.
     Masked-out lanes are dropped via out-of-range indices — the repo-wide
     scatter discipline.
@@ -196,6 +203,7 @@ def record_reads(s, cfg: geometry.SimConfig, *, mode, rd, lat_us, queue_us,
         (COMP_QUEUE, queue_us),
         (COMP_SENSE, sense_us),
         (COMP_RETRY, retry_us),
+        (COMP_CHANWAIT, chanw_us),
         (COMP_XFER, xfer_us),
     ):
         comp = comp.at[mode_drop, c, b].add(

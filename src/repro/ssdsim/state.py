@@ -50,26 +50,32 @@ class SSDState(NamedTuple):
     heat: jnp.ndarray  # (L,) float32
 
     # allocation cursors
-    open_user: jnp.ndarray  # (n_luns,) int32 open block per LUN (-1 none)
+    open_user: jnp.ndarray  # (n_dies,) int32 open block per die (-1 none)
     open_mig: jnp.ndarray  # (3,) int32 open migration block per mode (-1)
 
     # free-pool bookkeeping (maintained incrementally by erase/alloc so the
     # hot path never rescans block_state; invariant checked by the tests:
     # free_count == (block_state == FREE).sum())
     free_count: jnp.ndarray  # int32 scalar — exact number of FREE blocks
-    free_hint: jnp.ndarray  # (n_luns,) int32 — a (possibly stale) free block
-    #   per LUN, refreshed on erase; consumers verify against block_state and
+    free_hint: jnp.ndarray  # (n_dies,) int32 — a (possibly stale) free block
+    #   per die, refreshed on erase; consumers verify against block_state and
     #   fall back to a full scan only when the hint is dead
 
-    # timing
+    # timing — the (channel, die, plane) resource lattice (DESIGN.md §2C).
+    # A die owns sense/program/erase occupancy; the channel bus serializes
+    # page transfers across its dies (chan_model="lattice"; under "legacy"
+    # the channel clocks stay 0 and a die is the historical one-clock LUN).
     clock_ms: jnp.ndarray  # f32 scalar — simulated time
-    lun_busy_ms: jnp.ndarray  # (n_luns,) f32 — cumulative busy time
-    chan_busy_ms: jnp.ndarray  # (n_channels,) f32
+    die_busy_ms: jnp.ndarray  # (n_dies,) f32 — cumulative busy time
+    chan_busy_ms: jnp.ndarray  # (n_channels,) f32 — cumulative transfer time
     # open-loop arrival model (DESIGN.md §2C): absolute sim time at which
-    # each LUN next becomes available. Requests arriving earlier queue
-    # (FCFS per LUN); background work (migrations/GC/erase) pushes it
+    # each die next becomes available. Requests arriving earlier queue
+    # (FCFS per die); background work (migrations/GC/erase) pushes it
     # forward too, so reads block behind FTL tasks. Stays 0 in closed loop.
-    lun_avail_ms: jnp.ndarray  # (n_luns,) f32 — busy_until clock per LUN
+    die_avail_ms: jnp.ndarray  # (n_dies,) f32 — busy_until clock per die
+    # absolute sim time each channel bus next becomes free for a transfer
+    # (lattice open loop only; stays 0 under chan_model="legacy")
+    chan_avail_ms: jnp.ndarray  # (n_channels,) f32 — busy_until per channel
 
     # telemetry
     lat_hist: jnp.ndarray  # (telemetry.N_LAT_BINS,) f32 read-latency histogram
@@ -88,6 +94,8 @@ class SSDState(NamedTuple):
     svc_sum_ms: jnp.ndarray  # total recorded user-read latency (queueing
     #   delay when open-loop, + sense/retry + xfer)
     q_sum_ms: jnp.ndarray  # total read queueing delay (0 in closed loop)
+    chanq_sum_ms: jnp.ndarray  # total read channel-wait (transfer queueing
+    #   behind the bus; nonzero only under the lattice open-loop model)
     n_reads: jnp.ndarray
     n_writes: jnp.ndarray
     n_retries: jnp.ndarray
@@ -133,7 +141,7 @@ def init_state(cfg: geometry.SimConfig, initial_pe=None) -> SSDState:
     free = block_state == FREE
     # lowest-numbered free block per LUN seeds the allocation hints
     hint = jax.ops.segment_min(
-        jnp.where(free, blk, B), blk % cfg.n_luns, num_segments=cfg.n_luns
+        jnp.where(free, blk, B), cfg.die_of_block(blk), num_segments=cfg.n_dies
     )
     free_hint = jnp.where(hint < B, hint, -1).astype(jnp.int32)
 
@@ -151,7 +159,7 @@ def init_state(cfg: geometry.SimConfig, initial_pe=None) -> SSDState:
         block_bad=jnp.zeros((B,), bool),
         bad_count=jnp.int32(0),
         heat=jnp.zeros((L,), jnp.float32),
-        open_user=jnp.full((cfg.n_luns,), -1, jnp.int32),
+        open_user=jnp.full((cfg.n_dies,), -1, jnp.int32),
         open_mig=jnp.full((3,), -1, jnp.int32),
         free_count=free.sum().astype(jnp.int32),
         free_hint=free_hint,
@@ -159,11 +167,13 @@ def init_state(cfg: geometry.SimConfig, initial_pe=None) -> SSDState:
         w_lat_hist=jnp.zeros((telemetry.N_LAT_BINS,), jnp.float32),
         **obs.init_leaves(cfg),
         clock_ms=jnp.float32(0.0),
-        lun_busy_ms=jnp.zeros((cfg.n_luns,), jnp.float32),
+        die_busy_ms=jnp.zeros((cfg.n_dies,), jnp.float32),
         chan_busy_ms=jnp.zeros((cfg.n_channels,), jnp.float32),
-        lun_avail_ms=jnp.zeros((cfg.n_luns,), jnp.float32),
+        die_avail_ms=jnp.zeros((cfg.n_dies,), jnp.float32),
+        chan_avail_ms=jnp.zeros((cfg.n_channels,), jnp.float32),
         svc_sum_ms=jnp.float32(0.0),
         q_sum_ms=jnp.float32(0.0),
+        chanq_sum_ms=jnp.float32(0.0),
         n_reads=jnp.float32(0.0),
         n_writes=jnp.float32(0.0),
         n_retries=jnp.float32(0.0),
@@ -240,8 +250,8 @@ def check_invariants(s: SSDState, cfg: geometry.SimConfig, where: str = "") -> N
     hint = np.asarray(s.free_hint)
     assert ((hint >= -1) & (hint < B)).all(), f"free_hint range{tag}"
     live = hint >= 0
-    assert (hint[live] % cfg.n_luns == np.arange(cfg.n_luns)[live]).all(), \
-        f"free_hint off its LUN{tag}"
+    assert (hint[live] % cfg.n_dies == np.arange(cfg.n_dies)[live]).all(), \
+        f"free_hint off its die{tag}"
 
     # -- allocation cursors --
     for name, cur in (("open_user", np.asarray(s.open_user)),

@@ -4,14 +4,20 @@ Converts the in-scan instruments (:mod:`repro.ssdsim.obs`) into the Chrome
 trace-event JSON format, loadable in Perfetto (ui.perfetto.dev) or
 ``chrome://tracing``:
 
-- **pid 1 "flash events"** — one thread track per LUN plus a
-  "policy (page-granular)" track. Every decoded ring-buffer event becomes a
-  complete ("X") slice named by its trigger reason, placed at the event's
-  simulated time with a duration *estimated* from the timing-model constants
-  (valid pages moved x (read at the event's Eq.-3 retry estimate + program
-  in the destination mode), + erase for block-granular relocations). The
-  duration is a reconstruction for visual scale — the engine books the exact
-  same constants into ``lun_busy_ms`` but does not retain per-event spans.
+- **pid 1 "flash events"** — the resource lattice (DESIGN.md §2C): one
+  thread track per die (``die D (chan C)``), one per channel bus
+  (``channel C bus``), and a "policy (page-granular)" track. Every decoded
+  ring-buffer event becomes a complete ("X") slice named by its trigger
+  reason on its block's die track, placed at the event's simulated time
+  with a duration *estimated* from the timing-model constants (valid pages
+  moved x (read at the event's Eq.-3 retry estimate + program in the
+  destination mode), + erase for block-granular relocations); each
+  block-granular relocation also drops a companion ``transfer`` slice on
+  its die's channel-bus track (pages x ``cfg.transfer_us``), so Perfetto
+  shows bus occupancy stacking up under contention. Durations are a
+  reconstruction for visual scale — the engine books the exact same
+  constants into ``die_busy_ms``/``chan_avail_ms`` but does not retain
+  per-event spans.
 - **pid 2 "telemetry"** — one counter ("C") track per windowed time series
   (reads, retries, conversions, ...), sampled at each window start.
 
@@ -49,6 +55,11 @@ def _event_duration_us(rec: dict) -> float:
     return float(max(dur, 1.0))  # keep zero-page events visible
 
 
+def policy_tid(cfg: geometry.SimConfig) -> int:
+    """tid of the page-granular policy track (after dies and channel buses)."""
+    return cfg.n_dies + cfg.n_channels
+
+
 def _metadata(cfg: geometry.SimConfig) -> list[dict]:
     md = [
         dict(ph="M", pid=PID_FLASH, tid=0, name="process_name",
@@ -56,10 +67,17 @@ def _metadata(cfg: geometry.SimConfig) -> list[dict]:
         dict(ph="M", pid=PID_TELEMETRY, tid=0, name="process_name",
              args={"name": "telemetry"}),
     ]
-    for lun in range(cfg.n_luns):
-        md.append(dict(ph="M", pid=PID_FLASH, tid=lun, name="thread_name",
-                       args={"name": f"LUN {lun}"}))
-    md.append(dict(ph="M", pid=PID_FLASH, tid=cfg.n_luns, name="thread_name",
+    # tid layout mirrors the resource lattice: dies first, then one bus
+    # track per channel, then the policy track
+    for die in range(cfg.n_dies):
+        md.append(dict(ph="M", pid=PID_FLASH, tid=die, name="thread_name",
+                       args={"name": f"die {die} (chan {cfg.channel_of_die(die)})"}))
+    for chan in range(cfg.n_channels):
+        md.append(dict(ph="M", pid=PID_FLASH, tid=cfg.n_dies + chan,
+                       name="thread_name",
+                       args={"name": f"channel {chan} bus"}))
+    md.append(dict(ph="M", pid=PID_FLASH, tid=policy_tid(cfg),
+                   name="thread_name",
                    args={"name": "policy (page-granular)"}))
     return md
 
@@ -71,9 +89,22 @@ def chrome_trace(s, cfg: geometry.SimConfig) -> dict:
 
     records, total, dropped = obs.decode_events(s, cfg)
     for rec in records:
-        # block-granular events pin to their block's LUN; page-granular
-        # conversions (block == -1) span LUNs and get the policy track
-        tid = (rec["block"] % cfg.n_luns if rec["block"] >= 0 else cfg.n_luns)
+        # block-granular events pin to their block's die; page-granular
+        # conversions (block == -1) span dies and get the policy track
+        block_granular = rec["block"] >= 0
+        if block_granular:
+            die = int(cfg.die_of_block(rec["block"]))
+            tid = die
+        else:
+            tid = policy_tid(cfg)
+        args = dict(
+            block=rec["block"],
+            from_mode=rec["from_mode_name"],
+            to_mode=rec["to_mode_name"],
+            pages=rec["pages"],
+            retry_est=round(rec["retry_est"], 4),
+            conversions=rec["conversions"],
+        )
         body.append(
             dict(
                 ph="X",
@@ -83,16 +114,25 @@ def chrome_trace(s, cfg: geometry.SimConfig) -> dict:
                 dur=_event_duration_us(rec),
                 name=rec["reason_name"],
                 cat="relocation",
-                args=dict(
-                    block=rec["block"],
-                    from_mode=rec["from_mode_name"],
-                    to_mode=rec["to_mode_name"],
-                    pages=rec["pages"],
-                    retry_est=round(rec["retry_est"], 4),
-                    conversions=rec["conversions"],
-                ),
+                args=args,
             )
         )
+        if block_granular and rec["pages"] > 0:
+            # companion bus slice: the relocated pages' transfers serialize
+            # on the die's channel — visual only, like the die-slice spans
+            body.append(
+                dict(
+                    ph="X",
+                    pid=PID_FLASH,
+                    tid=cfg.n_dies + int(cfg.channel_of_die(die)),
+                    ts=rec["t_ms"] * 1000.0,
+                    dur=float(max(rec["pages"] * cfg.transfer_us, 1.0)),
+                    name="transfer",
+                    cat="transfer",
+                    args=dict(block=rec["block"], pages=rec["pages"],
+                              reason=rec["reason_name"]),
+                )
+            )
 
     ts = obs.decode_timeseries(s, cfg)
     win_ms = np.asarray(ts.get("window_start_ms", np.zeros(0)))

@@ -18,7 +18,8 @@ TINY = geometry.tiny_config()
 # records queueing-inclusive latency); everything else must agree when the
 # open-loop run is saturated from t=0
 _TIMING_FIELDS = {"lat_hist", "w_lat_hist", "svc_sum_ms", "q_sum_ms",
-                  "lun_avail_ms", "clock_ms", "lun_busy_ms", "chan_busy_ms",
+                  "chanq_sum_ms", "die_avail_ms", "chan_avail_ms",
+                  "clock_ms", "die_busy_ms", "chan_busy_ms",
                   "page_write_ms", "heat", "n_retries"}
 
 
@@ -153,11 +154,11 @@ class TestSaturationEquivalence:
             else:
                 assert (a == b).all(), name
         # service totals: no idling, so availability == busy time per LUN
-        np.testing.assert_allclose(np.asarray(s_o.lun_avail_ms),
-                                   np.asarray(s_o.lun_busy_ms),
+        np.testing.assert_allclose(np.asarray(s_o.die_avail_ms),
+                                   np.asarray(s_o.die_busy_ms),
                                    rtol=1e-4, atol=1e-3)
-        np.testing.assert_allclose(np.asarray(s_o.lun_busy_ms),
-                                   np.asarray(s_c.lun_busy_ms),
+        np.testing.assert_allclose(np.asarray(s_o.die_busy_ms),
+                                   np.asarray(s_c.die_busy_ms),
                                    rtol=1e-4, atol=1e-3)
         assert float(s_o.lat_hist.sum()) == float(s_c.lat_hist.sum())
 
@@ -170,8 +171,8 @@ class TestSaturationEquivalence:
         s_o, _ = engine.run(cfg, _zero_arrivals(tr))
         assert float(s_c.n_reads) == float(s_o.n_reads)
         assert float(s_c.n_retries) == float(s_o.n_retries)
-        np.testing.assert_allclose(np.asarray(s_o.lun_avail_ms),
-                                   np.asarray(s_c.lun_busy_ms), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(s_o.die_avail_ms),
+                                   np.asarray(s_c.die_busy_ms), rtol=1e-5)
 
 
 class TestLoadRegression:
@@ -292,13 +293,13 @@ class TestOpenLoopReplay:
         assert (np.diff(flat) >= 0).all()  # cycling keeps time monotone
         s, _ = engine.run(TINY, tr)
         assert float(s.n_reads) + float(s.n_writes) == 2_000
-        assert float(s.lun_avail_ms.max()) > 0
+        assert float(s.die_avail_ms.max()) > 0
 
     def test_msr_sample_closed_loop_opt_out(self):
         tr = registry.build("msr_sample", TINY, 1_000, seed=0, arrivals=False)
         assert "arrival_ms" not in tr
         s, _ = engine.run(TINY, tr)
-        assert float(s.lun_avail_ms.max()) == 0.0
+        assert float(s.die_avail_ms.max()) == 0.0
 
 
 class TestPolicyDedup:

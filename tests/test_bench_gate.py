@@ -134,11 +134,12 @@ class TestGateMain:
         rows = doc["tiny_baseline"]["rows"]
         assert doc["tiny_baseline"]["config"]["tiny"] is True
         names = [r[0] for r in rows if r[0].endswith("/chunks_per_sec")]
-        assert len(names) == 4
-        # the guarded set includes the fused-GC pressure section and the
-        # armed fault-injection path
+        assert len(names) == 5
+        # the guarded set includes the fused-GC pressure section, the
+        # armed fault-injection path, and the lattice channel model
         assert "engine/gc_pressure/chunks_per_sec" in names
         assert "engine/mixed_faults/chunks_per_sec" in names
+        assert "engine/channel_contention/chunks_per_sec" in names
 
     def test_markdown_render(self):
         md = render_markdown(gate(_doc(), _doc()), 0.5, 0.8)

@@ -40,6 +40,17 @@ def open_run():
     return cfg, jax.device_get(s)
 
 
+@pytest.fixture(scope="module")
+def lattice_run():
+    """Open-loop run under the lattice channel model on a single shared bus
+    (1 channel x 4 dies): the chan_wait component actually fires."""
+    cfg = _full_cfg(n_channels=1, luns_per_channel=4, chan_model="lattice")
+    tr = workload.mixed_trace(cfg, 16 * cfg.chunk, theta=1.0, read_frac=0.9,
+                              seed=3, arrival_rate=30000.0)
+    s, _ = engine.run(cfg, tr)
+    return cfg, jax.device_get(s)
+
+
 class TestLatencyAttribution:
     def test_per_mode_hist_sums_to_lat_hist_bit_exact(self, mixed_run):
         cfg, s = mixed_run
@@ -83,6 +94,46 @@ class TestLatencyAttribution:
     def test_open_loop_queue_component_positive(self, open_run):
         cfg, s = open_run
         assert np.asarray(s.obs_lat_comp)[:, obs.COMP_QUEUE].sum() > 0.0
+
+    def test_legacy_chan_wait_component_is_zero(self, open_run):
+        """Under chan_model="legacy" transfer never queues, so the
+        chan_wait component carries no mass (closed-loop likewise)."""
+        cfg, s = open_run
+        assert np.asarray(s.obs_lat_comp)[:, obs.COMP_CHANWAIT].sum() == 0.0
+
+    def test_closed_loop_chan_wait_component_is_zero(self, mixed_run):
+        cfg, s = mixed_run
+        assert np.asarray(s.obs_lat_comp)[:, obs.COMP_CHANWAIT].sum() == 0.0
+
+    def test_lattice_chan_wait_component_positive(self, lattice_run):
+        """4 dies funneling into one bus under offered load: some reads
+        must wait for the channel, and the wait is attributed."""
+        cfg, s = lattice_run
+        assert np.asarray(s.obs_lat_comp)[:, obs.COMP_CHANWAIT].sum() > 0.0
+
+    def test_lattice_hist_sums_bit_exact(self, lattice_run):
+        cfg, s = lattice_run
+        assert np.array_equal(np.asarray(s.obs_lat_mode).sum(axis=0),
+                              np.asarray(s.lat_hist))
+
+    def test_lattice_components_sum_to_recorded_latency(self, lattice_run):
+        """The five components (queue + sense + retry + chan_wait +
+        transfer) still reconstruct the binned latency mass under the
+        tandem model."""
+        cfg, s = lattice_run
+        comp = np.asarray(s.obs_lat_comp, np.float64)
+        counts = np.asarray(s.obs_lat_mode, np.float64)
+        total_us = comp.sum(axis=1)
+        from repro.ssdsim import telemetry
+        lo = telemetry.bin_edges_us()[:-1]
+        hi = telemetry.bin_edges_us()[1:]
+        inner = slice(1, telemetry.N_LAT_BINS - 1)
+        assert (
+            total_us[:, inner] >= counts[:, inner] * lo[inner] * 0.999
+        ).all()
+        assert (
+            total_us[:, inner] <= counts[:, inner] * hi[inner] * 1.001
+        ).all()
 
     def test_tail_attribution_shares_normalized(self, mixed_run):
         cfg, s = mixed_run
@@ -191,17 +242,22 @@ class TestChromeTrace:
             if e["ph"] == "X":
                 assert e["ts"] >= 0 and e["dur"] > 0
                 assert e["pid"] == trace_export.PID_FLASH
-                assert 0 <= e["tid"] <= cfg.n_luns
+                assert 0 <= e["tid"] <= trace_export.policy_tid(cfg)
             if e["ph"] == "C":
                 assert e["pid"] == trace_export.PID_TELEMETRY
         ts = [e["ts"] for e in body]
         assert all(a <= b for a, b in zip(ts, ts[1:])), "ts not monotone"
-        # one named track per LUN plus the page-granular policy track
+        # the lattice tracks: one per die, one bus per channel, plus the
+        # page-granular policy track
         names = {
             e["args"]["name"] for e in evs
             if e["ph"] == "M" and e["name"] == "thread_name"
         }
-        assert {f"LUN {i}" for i in range(cfg.n_luns)} <= names
+        assert {
+            f"die {d} (chan {cfg.channel_of_die(d)})"
+            for d in range(cfg.n_dies)
+        } <= names
+        assert {f"channel {c} bus" for c in range(cfg.n_channels)} <= names
         assert "policy (page-granular)" in names
 
     def test_event_slices_match_ring(self, mixed_run, tmp_path):
@@ -209,7 +265,16 @@ class TestChromeTrace:
         doc = trace_export.chrome_trace(s, cfg)
         records, total, _ = obs.decode_events(s, cfg)
         x = [e for e in doc["traceEvents"] if e["ph"] == "X"]
-        assert len(x) == len(records)
+        reloc = [e for e in x if e["cat"] == "relocation"]
+        xfer = [e for e in x if e["cat"] == "transfer"]
+        assert len(reloc) == len(records)
+        # each block-granular relocation with pages moved gets a companion
+        # transfer slice on its die's channel-bus track
+        assert len(xfer) == sum(
+            1 for r in records if r["block"] >= 0 and r["pages"] > 0
+        )
+        for e in xfer:
+            assert cfg.n_dies <= e["tid"] < cfg.n_dies + cfg.n_channels
         assert doc["otherData"]["events_total"] == total
 
 
