@@ -143,6 +143,10 @@ def _sections(tiny: bool, n_requests: int):
 
     cfg = bench_config(tiny)
     gc_cfg = gc_pressure_config(tiny)
+    # same geometry + trace as ``gc_pressure`` under the lifespan-aware GC
+    # victim objective (DESIGN.md §2E): the pair prices the pluggable
+    # scorer + wear telemetry against the pinned min-valid default
+    gcl_cfg = dataclasses.replace(gc_cfg, gc_objective="lifespan")
     cc_cfg = channel_contention_config(tiny)
     mixed_trace = workload.mixed_trace(cfg, n_requests, 1.2, read_frac=0.7,
                                        seed=1)
@@ -169,6 +173,12 @@ def _sections(tiny: bool, n_requests: int):
         "gc_pressure": (
             gc_cfg,
             workload.mixed_trace(gc_cfg, n_requests, 1.2, seed=1,
+                                 read_frac=GC_PRESSURE_READ_FRAC,
+                                 write_theta=GC_PRESSURE_WRITE_THETA),
+            True),
+        "gc_lifespan": (
+            gcl_cfg,
+            workload.mixed_trace(gcl_cfg, n_requests, 1.2, seed=1,
                                  read_frac=GC_PRESSURE_READ_FRAC,
                                  write_theta=GC_PRESSURE_WRITE_THETA),
             True),
@@ -295,6 +305,13 @@ def main() -> None:
                 "gc_victims_per_pass": gc_cfg.gc_victims_per_pass,
                 "read_frac": GC_PRESSURE_READ_FRAC,
                 "write_theta": GC_PRESSURE_WRITE_THETA,
+            },
+            "gc_lifespan": {
+                "gc_objective": "lifespan",
+                "gc_alpha": gc_cfg.gc_alpha,
+                "gc_beta": gc_cfg.gc_beta,
+                "gc_gamma": gc_cfg.gc_gamma,
+                "base": "gc_pressure geometry + trace",
             },
             "mixed_faults": {
                 "max_read_retries": FAULT_MAX_READ_RETRIES,

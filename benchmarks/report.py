@@ -174,11 +174,53 @@ def obs_report(doc: dict) -> list[str]:
     return lines
 
 
+def endurance_report(doc: dict) -> list[str]:
+    """Endurance frontier (DESIGN.md §2E): read-p99 vs WAF vs projected
+    lifetime per (policy, GC objective, wear stage) — the multi-objective
+    trade-off RARO claims to win. Column units come from the single
+    metrics-schema registry."""
+    try:
+        from repro.ssdsim import metrics_schema
+        u = metrics_schema.units()
+    except ImportError:  # report must stay renderable without PYTHONPATH=src
+        u = {}
+    cfg = doc.get("config", {})
+    lines = [
+        "### Endurance frontier (read p99 vs WAF vs lifetime)",
+        "",
+        f"`{cfg.get('scenario', '?')}` × {cfg.get('n_runs', '?')} runs; "
+        f"lifespan scorer α={cfg.get('gc_alpha', '?')} "
+        f"β={cfg.get('gc_beta', '?')} γ={cfg.get('gc_gamma', '?')}",
+        "",
+        f"| policy | GC objective | wear (P/E₀) "
+        f"| read p99 ({u.get('read_lat_p99_us', 'us')}) "
+        f"| WAF ({u.get('waf', 'ratio')}) "
+        f"| P/E var ({u.get('pe_variance', 'cycles^2')}) "
+        f"| lifetime ({u.get('lifetime_years', 'years')}) "
+        f"| cap loss ({u.get('capacity_loss_gib', 'GiB')}) |",
+        "|---|---|---:|---:|---:|---:|---:|---:|",
+    ]
+    for p in doc.get("frontier", []):
+        lines.append(
+            f"| {p['policy']} | {p['gc_objective']} | {p['initial_pe']} "
+            f"| {_fmt(p['read_lat_p99_us'])} | {p['waf']:.4f} "
+            f"| {_fmt(p['pe_variance'])} | {p['lifetime_years']:.3g} "
+            f"| {_fmt(p['capacity_loss_gib'])} |"
+        )
+    heads = [(n, v, un) for n, v, un in doc.get("rows", [])
+             if "lifespan_vs_min_valid" in n]
+    if heads:
+        lines += ["", "| lifespan ÷ min-valid | ratio |", "|---|---:|"]
+        lines += [f"| `{n}` | {float(v):.4f}{un} |" for n, v, un in heads]
+    return lines
+
+
 RENDERERS = {
     "BENCH_engine.json": engine_report,
     "BENCH_latency.json": latency_report,
     "BENCH_sweep.json": sweep_report,
     "BENCH_obs.json": obs_report,
+    "BENCH_endurance.json": endurance_report,
 }
 
 

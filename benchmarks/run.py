@@ -69,6 +69,12 @@ def main() -> None:
             12_000 if q else 40_000,
             out_dir=args.artifacts,
             devices=args.devices)),
+        # named so `--only sweep` also matches it: the endurance grid is
+        # part of the paper's sweep story (read-p99 vs WAF vs lifetime)
+        ("endurance_sweep", lambda: sweep_bench.sweep_endurance(
+            8_192 if q else 24_576,
+            out_dir=args.artifacts,
+            devices=args.devices)),
         ("tiered_kv", lambda: tiered_kv.kv_policy_comparison(24 if q else 48)),
     ]
 

@@ -111,6 +111,97 @@ def sweep_fault_storm(n_requests=40_000, out_dir=None, devices=None):
     return rows
 
 
+def _endurance_frontier(results):
+    """Collapse runs to one frontier point per (policy, gc_objective, pe):
+    mean-over-seeds read p99 / WAF / P/E variance / projected lifetime."""
+    cells = sorted({(r["run"]["policy"], r["run"]["gc_objective"],
+                     r["run"]["initial_pe"]) for r in results})
+    points = []
+    for pol, gco, pe in cells:
+        sel = [r for r in results
+               if (r["run"]["policy"], r["run"]["gc_objective"],
+                   r["run"]["initial_pe"]) == (pol, gco, pe)]
+        points.append({
+            "policy": pol,
+            "gc_objective": gco,
+            "initial_pe": pe,
+            "read_lat_p99_us": float(np.mean([r["read_lat_p99_us"] for r in sel])),
+            "waf": float(np.mean([r["waf"] for r in sel])),
+            "pe_variance": float(np.mean([r["pe_variance"] for r in sel])),
+            "pe_max": float(np.mean([r["pe_max"] for r in sel])),
+            "lifetime_years": float(np.mean([r["lifetime_years"] for r in sel])),
+            "capacity_loss_gib": float(np.mean([r["capacity_loss_gib"] for r in sel])),
+        })
+    return points
+
+
+def sweep_endurance(n_requests=24_576, out_dir=None, devices=None):
+    """Endurance section rows (DESIGN.md §2E): the
+    ``configs.raro_ssd.endurance_sweep`` grid — {baseline, RARO} ×
+    {min-valid, lifespan} GC × wear stages — reporting the read-p99 vs WAF
+    vs projected-lifetime frontier alongside the per-run rows, plus
+    headline lifespan-vs-min-valid deltas. Writes the committed
+    ``BENCH_endurance.json`` (frontier + rows) when ``out_dir`` is set."""
+    from repro.configs import raro_ssd
+    from repro.experiments import sweep
+
+    spec = raro_ssd.endurance_sweep(n_requests=n_requests)
+    res = sweep.run_sweep(spec, verbose=True, devices=devices)
+    rows = []
+    for r in res:
+        rows += sweep.result_rows(r, prefix="endurance")
+
+    frontier = _endurance_frontier(res)
+    for p in frontier:
+        stem = (f"endurance/{p['policy']}_gc_{p['gc_objective']}"
+                f"_pe{p['initial_pe']}")
+        rows.append((f"{stem}/read_lat_p99_us", p["read_lat_p99_us"], "us"))
+        rows.append((f"{stem}/waf", p["waf"], "ratio"))
+        rows.append((f"{stem}/pe_variance", p["pe_variance"], "cycles^2"))
+        rows.append((f"{stem}/lifetime_years", p["lifetime_years"], "years"))
+    # headline: what the lifespan objective buys (and costs) per policy
+    for pol in sorted({p["policy"] for p in frontier}):
+        by_obj = {}
+        for obj in ("min_valid", "lifespan"):
+            v = [p for p in frontier
+                 if p["policy"] == pol and p["gc_objective"] == obj]
+            if v:
+                by_obj[obj] = v
+        if len(by_obj) == 2:
+            for metric, unit in (("waf", "x"), ("pe_variance", "x"),
+                                 ("lifetime_years", "x")):
+                a = np.mean([p[metric] for p in by_obj["lifespan"]])
+                b = np.mean([p[metric] for p in by_obj["min_valid"]])
+                rows.append((f"endurance/{pol}/lifespan_vs_min_valid_{metric}",
+                             float(a / max(b, 1e-12)), unit))
+
+    if out_dir is not None:
+        out = Path(out_dir)
+        out.mkdir(parents=True, exist_ok=True)
+        doc = {
+            "bench": "endurance",
+            "config": {
+                "scenario": spec.scenario,
+                "n_requests": spec.n_requests,
+                "n_runs": spec.n_runs(),
+                "policies": sorted({r["run"]["policy"] for r in res}),
+                "gc_objectives": list(spec.gc_objective),
+                "initial_pe": list(spec.initial_pe),
+                "gc_alpha": spec.base.gc_alpha,
+                "gc_beta": spec.base.gc_beta,
+                "gc_gamma": spec.base.gc_gamma,
+            },
+            "frontier": frontier,
+            "rows": [list(r) for r in rows],
+        }
+        p = out / "BENCH_endurance.json"
+        p.write_text(json.dumps(doc, indent=1, sort_keys=True))
+        print(f"# wrote {p}", flush=True)
+        paths = sweep.write_artifacts(res, out_dir)
+        print(f"# wrote {len(paths)} BENCH_*.json artifacts to {out_dir}", flush=True)
+    return rows
+
+
 # ------------------------- sharded scaling bench ---------------------------
 
 

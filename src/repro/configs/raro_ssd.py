@@ -75,6 +75,37 @@ def fault_storm_sweep(scenario: str = "fault_storm",
     )
 
 
+def endurance_sweep(scenario: str = "fault_storm",
+                    n_requests: int = 24_576,
+                    stages=("young", "old"), seeds=(0,),
+                    gc_objectives=("min_valid", "lifespan")):
+    """Multi-objective endurance grid (DESIGN.md §2E): {baseline, RARO} ×
+    {min-valid GC, lifespan-aware GC} × wear stages on a write-heavy trace
+    over a small high-occupancy geometry, so GC fires constantly and the
+    WAF / P/E-variance / lifetime rows actually discriminate. This is the
+    read-p99 vs WAF vs projected-lifetime frontier RARO claims to win —
+    "did the extra conversions pay for themselves?" — rendered by
+    ``benchmarks/report.py`` from ``BENCH_endurance.json``. The
+    ``gc_objective`` axis batches through the traced RunKnobs code, so both
+    objectives share one compiled program per policy."""
+    from repro.experiments.sweep import SweepSpec
+
+    return SweepSpec(
+        scenario=scenario,
+        n_requests=n_requests,
+        policies=(BASELINE, RARO),
+        initial_pe=tuple(STAGE_PE[s] for s in stages),
+        seeds=tuple(seeds),
+        gc_objective=tuple(gc_objectives),
+        base=SimConfig(
+            blocks_per_plane=64, slots_per_block=256, n_logical=57_344,
+            chunk=256, migrate_pages_per_chunk=64,
+            max_conversions_per_chunk=4, gc_free_threshold=24,
+            gc_victims_per_pass=8, device_age_h=24.0,
+        ),
+    )
+
+
 def latency_load_sweep(scenario: str = "hammer_openloop",
                        n_requests: int = 80_000,
                        rate_iops: float = 50_000.0,

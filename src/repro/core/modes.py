@@ -41,8 +41,52 @@ READ_LATENCY_US = jnp.array([20.0, 66.0, 140.0], dtype=jnp.float32)
 WRITE_LATENCY_US = jnp.array([160.0, 730.0, 3102.0], dtype=jnp.float32)
 ERASE_LATENCY_US = jnp.array([2000.0, 3000.0, 10000.0], dtype=jnp.float32)
 
-# Rated P/E endurance per mode (Table IV).
-PE_LIMIT = jnp.array([100_000, 3_000, 1_000], dtype=jnp.int32)
+# Rated P/E endurance per mode (Table IV). RATED_PE is the host-side view
+# (plain ints) so summarize/report code can key on it without touching the
+# device; PE_LIMIT is the same table as a device array for traced scorers.
+RATED_PE = (100_000, 3_000, 1_000)
+PE_LIMIT = jnp.array(RATED_PE, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Endurance conversion helpers (DESIGN.md §2E). All host-side floats, keyed
+# on the rated-endurance table above; JEDEC JESD218-style definitions:
+#   TBW  = capacity × rated P/E ÷ WAF   (total host bytes writable)
+#   DWPD = host bytes/day ÷ capacity    (drive writes per day)
+#   lifetime = TBW ÷ host bytes/day     (years until rated wear exhausted)
+# ---------------------------------------------------------------------------
+_DAYS_PER_YEAR = 365.25
+
+
+def tbw_bytes(capacity_bytes, rated_pe_cycles, waf=1.0):
+    """Total host bytes writable before rated wear is exhausted.
+
+    ``waf`` scales down writable host bytes: every host byte costs ``waf``
+    physical bytes of programs, so TBW = capacity × P/E ÷ WAF.
+    """
+    return float(capacity_bytes) * float(rated_pe_cycles) / max(float(waf), 1e-12)
+
+
+def dwpd(host_bytes_per_day, capacity_bytes):
+    """Drive writes per day at the observed host write rate."""
+    return float(host_bytes_per_day) / max(float(capacity_bytes), 1e-12)
+
+
+def lifetime_years(tbw, host_bytes_per_day):
+    """Years until ``tbw`` is exhausted at the observed host write rate.
+
+    Returns 0.0 when no host writes were observed (lifetime undefined —
+    the 0 sentinel keeps sweep rows JSON-finite).
+    """
+    if float(host_bytes_per_day) <= 0.0:
+        return 0.0
+    return float(tbw) / (float(host_bytes_per_day) * _DAYS_PER_YEAR)
+
+
+def dwpd_for_lifetime(tbw, capacity_bytes, years):
+    """Sustainable DWPD for a target lifetime: TBW ÷ (capacity × days)."""
+    denom = max(float(capacity_bytes) * float(years) * _DAYS_PER_YEAR, 1e-12)
+    return float(tbw) / denom
 
 # ---------------------------------------------------------------------------
 # Heat classes (paper §IV-A heat classifier).

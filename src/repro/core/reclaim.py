@@ -1,21 +1,64 @@
-"""Elastic capacity recovery (paper §IV-E, Fig. 12).
+"""Victim scoring and elastic capacity recovery (paper §IV-E, Fig. 12).
 
-Hot data migrated to SLC/TLC eventually cools; leaving it in low-density
-modes blocks the tiering path of new hot data and erodes capacity. The
-recovery policy demotes the *coldest* low-density blocks back toward QLC,
-but only under free-space pressure, weighing (paper's words) "the remaining
-space of the device, the efficiency of rubbish collection, and the user's
-writing demand".
+This module owns *all* victim selection in the simulator behind one entry
+point, :func:`score_victims` — GC victim picking, reclaim demotion, and the
+conversion paths share its top-k lane machinery, so a new scoring objective
+is one formula here instead of three forked code paths (DESIGN.md §2E).
+
+Objectives:
+
+``"min_valid"``
+    Classic greedy GC: fewest valid pages first. Pinned bit-identical to
+    the historical inline selection in ``ftl.select_gc_victims``.
+``"lifespan"``
+    Wear-levelled GC: ``score = α·invalid_ratio − β·migration_cost −
+    γ·pe_normalized`` where ``migration_cost`` is the valid fraction that
+    must be relocated and ``pe_normalized`` is the block's P/E count over
+    its mode's rated endurance. α/β/γ come from ``SimConfig``.
+``"demotion"``
+    Elastic capacity recovery: hot data migrated to SLC/TLC eventually
+    cools; leaving it in low-density modes blocks the tiering path of new
+    hot data and erodes capacity. Demotes the *coldest* low-density blocks
+    back toward QLC, but only under free-space pressure, weighing (paper's
+    words) "the remaining space of the device, the efficiency of rubbish
+    collection, and the user's writing demand".
+
+The GC objective is also selectable per-run as a traced ``RunKnobs`` axis
+(``objective_code``): a ``jnp.where`` between the two formulas, so a vmapped
+sweep batches both objectives in one compiled program. Code 0 (min-valid)
+traces the identical selection ops as the static default.
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import modes
+
+# Victim-scoring objectives. GC_OBJECTIVES (the statically configurable
+# subset, mirrored by geometry.GC_OBJECTIVES for SimConfig validation) maps
+# to integer codes for the traced RunKnobs sweep axis.
+GC_MIN_VALID = "min_valid"
+GC_LIFESPAN = "lifespan"
+DEMOTION = "demotion"
+GC_OBJECTIVES = (GC_MIN_VALID, GC_LIFESPAN)
+GC_OBJECTIVE_CODES = {GC_MIN_VALID: 0, GC_LIFESPAN: 1}
+
+_DEPRECATED_WARNED: set[str] = set()
+
+
+def _warn_deprecated(name: str) -> None:
+    if name in _DEPRECATED_WARNED:
+        return
+    _DEPRECATED_WARNED.add(name)
+    warnings.warn(
+        f"reclaim.{name} is deprecated; use reclaim.score_victims(...)",
+        DeprecationWarning, stacklevel=3,
+    )
 
 
 class ReclaimConfig(NamedTuple):
@@ -43,32 +86,9 @@ def demotion_scores(block_mode, block_heat, cold_age):
     return jnp.where(eligible, score, -jnp.inf)
 
 
-def select_demotions(block_mode, block_heat, cold_age, free_frac, cfg: ReclaimConfig):
-    """Pick up to ``max_per_pass`` blocks to demote one density level.
-
-    Returns (mask, target_mode): ``mask[b]`` true if block b is demoted this
-    pass; ``target_mode[b]`` its new mode (SLC->TLC->QLC one level per pass,
-    the paper's fine-grained multi-mode conversion in reverse).
-    """
-    scores = demotion_scores(block_mode, block_heat, cold_age)
-    eligible = (scores > -jnp.inf) & (jnp.asarray(cold_age) >= cfg.cold_epochs)
-    under_pressure = jnp.asarray(free_frac) < cfg.low_watermark
-
-    # Top-k by score among eligible blocks.
-    k = min(cfg.max_per_pass, block_mode.shape[-1])
-    masked = jnp.where(eligible, scores, -jnp.inf)
-    _, top_idx = jax.lax.top_k(masked, k)
-    mask = jnp.zeros(block_mode.shape, bool).at[top_idx].set(True)
-    mask = mask & eligible & under_pressure
-
-    target = jnp.where(mask, jnp.minimum(jnp.asarray(block_mode, jnp.int32) + 1, modes.QLC), block_mode)
-    return mask, target
-
-
-def topk_victims(scores, eligible, k: int):
-    """Shared top-k victim lane selection for the fused background-FTL
-    passes (reclaim demotion and multi-victim GC): one ``lax.top_k`` over
-    ``eligible``-masked float scores.
+def _topk(scores, eligible, k: int):
+    """Top-k victim lane selection shared by every objective: one
+    ``lax.top_k`` over ``eligible``-masked float scores.
 
     Returns ``(victims, ok)``: ``k`` block ids ordered best-candidate-first
     (ties break to the lowest block id, matching a sequential greedy argmax)
@@ -80,21 +100,123 @@ def topk_victims(scores, eligible, k: int):
     return victims.astype(jnp.int32), vals > -jnp.inf
 
 
-def select_demotion_victims(block_mode, block_heat, cold_age, free_frac,
-                            cfg: ReclaimConfig):
-    """Fused victim selection for the engine hot path: one ``lax.top_k``
-    replaces the per-candidate argmax loop of the dense-mask API above.
-
-    Returns ``(victims, ok, target)``: up to ``max_per_pass`` block ids
-    ordered best-candidate-first, a validity lane mask, and each victim's
-    one-level demotion target mode. Selection semantics match
-    :func:`select_demotions` (same scores, hysteresis and watermark).
-    """
+def _demotion_select(block_mode, block_heat, cold_age, free_frac, cfg: ReclaimConfig):
+    """Array-level demotion selection core (scores → hysteresis →
+    watermark → top-k → one-level target)."""
     scores = demotion_scores(block_mode, block_heat, cold_age)
     eligible = (scores > -jnp.inf) & (jnp.asarray(cold_age) >= cfg.cold_epochs)
     under_pressure = jnp.asarray(free_frac) < cfg.low_watermark
 
     k = min(cfg.max_per_pass, block_mode.shape[-1])
-    victims, ok = topk_victims(scores, eligible & under_pressure, k)
+    victims, ok = _topk(scores, eligible & under_pressure, k)
     target = jnp.minimum(jnp.asarray(block_mode, jnp.int32)[victims] + 1, modes.QLC)
     return victims, ok, target
+
+
+def gc_scores(s, cfg, objective: str = GC_MIN_VALID, objective_code=None):
+    """Per-block GC victim scores (larger = better victim).
+
+    ``objective_code`` (a traced int32 scalar, see ``RunKnobs.gc_objective``)
+    selects the formula inside the trace via ``jnp.where``; when ``None``
+    the static ``objective`` string picks it at trace time. The min-valid
+    branch traces exactly ``-block_valid.astype(f32)``, preserving
+    bit-identity with the historical selection.
+    """
+    min_valid = -s.block_valid.astype(jnp.float32)
+    if objective_code is None and objective == GC_MIN_VALID:
+        return min_valid
+
+    from repro.ssdsim import geometry  # deferred: core must stay importable alone
+
+    pages = geometry.pages_per_block(cfg)[s.block_mode].astype(jnp.float32)
+    migration_cost = s.block_valid.astype(jnp.float32) / pages
+    invalid_ratio = 1.0 - migration_cost
+    pe_norm = s.block_pe.astype(jnp.float32) / modes.PE_LIMIT[s.block_mode].astype(jnp.float32)
+    lifespan = (cfg.gc_alpha * invalid_ratio
+                - cfg.gc_beta * migration_cost
+                - cfg.gc_gamma * pe_norm)
+    if objective_code is None:
+        return lifespan
+    code = jnp.asarray(objective_code, jnp.int32)
+    return jnp.where(code == GC_OBJECTIVE_CODES[GC_LIFESPAN], lifespan, min_valid)
+
+
+def score_victims(s, cfg, objective: str = GC_MIN_VALID, *, k: int | None = None,
+                  block_heat=None, free_frac=None, reclaim_cfg: ReclaimConfig | None = None,
+                  objective_code=None):
+    """Unified victim selection over an ``SSDState``.
+
+    Returns ``(victims, ok, target)``: block-id lanes ordered
+    best-candidate-first, a validity mask, and each victim's destination
+    mode (its own mode for GC — same-density relocation — or one density
+    level down for demotion).
+
+    GC objectives (``"min_valid"``/``"lifespan"``) require ``k``; the
+    ``"demotion"`` objective requires ``block_heat``, ``free_frac`` and
+    ``reclaim_cfg`` (its k is ``reclaim_cfg.max_per_pass``).
+    """
+    if objective == DEMOTION:
+        if block_heat is None or free_frac is None or reclaim_cfg is None:
+            raise ValueError("demotion objective needs block_heat, free_frac, reclaim_cfg")
+        from repro.ssdsim import state as st  # deferred: core must stay importable alone
+
+        # Open (partially written) low-density blocks are not demotable:
+        # treat them as QLC so demotion_scores masks them out.
+        eligible_mode = jnp.where(s.block_state == st.FULL, s.block_mode, modes.QLC)
+        return _demotion_select(eligible_mode, block_heat, s.block_cold_age,
+                                free_frac, reclaim_cfg)
+
+    if objective not in GC_OBJECTIVES:
+        raise ValueError(f"unknown victim objective {objective!r}")
+    if k is None:
+        raise ValueError("GC objectives need an explicit k")
+    from repro.ssdsim import geometry, state as st  # deferred imports, as above
+
+    ppb = geometry.pages_per_block(cfg)
+    reclaimable = (s.block_state == st.FULL) & (s.block_valid < ppb[s.block_mode])
+    scores = gc_scores(s, cfg, objective, objective_code)
+    victims, ok = _topk(scores, reclaimable, k)
+    target = s.block_mode[victims]  # GC relocates at the victim's own density
+    return victims, ok, target
+
+
+# ---------------------------------------------------------------------------
+# Deprecated wrappers (pre-score_victims API). Thin shims over the shared
+# selection core; equivalence is pinned by tests/test_endurance.py.
+# ---------------------------------------------------------------------------
+
+def select_demotions(block_mode, block_heat, cold_age, free_frac, cfg: ReclaimConfig):
+    """Deprecated dense-mask demotion API — use :func:`score_victims`.
+
+    Returns (mask, target_mode): ``mask[b]`` true if block b is demoted this
+    pass; ``target_mode[b]`` its new mode (SLC->TLC->QLC one level per pass,
+    the paper's fine-grained multi-mode conversion in reverse).
+    """
+    _warn_deprecated("select_demotions")
+    victims, ok, _ = _demotion_select(block_mode, block_heat, cold_age, free_frac, cfg)
+    n_blocks = jnp.asarray(block_mode).shape[-1]
+    mask = jnp.zeros((n_blocks,), bool).at[jnp.where(ok, victims, n_blocks)].set(
+        True, mode="drop")
+    target = jnp.where(mask, jnp.minimum(jnp.asarray(block_mode, jnp.int32) + 1, modes.QLC),
+                       block_mode)
+    return mask, target
+
+
+def topk_victims(scores, eligible, k: int):
+    """Deprecated — use :func:`score_victims` (or its ``_topk`` core)."""
+    _warn_deprecated("topk_victims")
+    return _topk(scores, eligible, k)
+
+
+def select_demotion_victims(block_mode, block_heat, cold_age, free_frac,
+                            cfg: ReclaimConfig):
+    """Deprecated lane-based demotion API — use
+    ``score_victims(s, cfg, "demotion", ...)``, which also folds in the
+    open-block eligibility mask the engine used to compute by hand.
+
+    Returns ``(victims, ok, target)``: up to ``max_per_pass`` block ids
+    ordered best-candidate-first, a validity lane mask, and each victim's
+    one-level demotion target mode.
+    """
+    _warn_deprecated("select_demotion_victims")
+    return _demotion_select(block_mode, block_heat, cold_age, free_frac, cfg)

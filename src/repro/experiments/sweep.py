@@ -44,8 +44,9 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.core import reclaim
 from repro.experiments import registry
-from repro.ssdsim import engine, geometry, policies
+from repro.ssdsim import engine, geometry, metrics_schema, policies
 from repro.ssdsim import state as st
 
 
@@ -75,6 +76,12 @@ class SweepSpec:
     erase_fail_rate: tuple[float, ...] = (0.0,)
     max_read_retries: tuple[int, ...] = (-1,)
     fault_seed: tuple[int, ...] = (0,)
+    # GC victim-objective axis (DESIGN.md §2E), batched through
+    # RunKnobs.gc_objective as integer codes: while the axis sits at its
+    # default the knob stays None (no formula-select traced); a mixed axis
+    # runs both objectives in one compiled program, with code 0 (min_valid)
+    # pinned bit-identical to the knob-free trace.
+    gc_objective: tuple[str, ...] = ("min_valid",)
     # forwarded to the scenario builder (e.g. {"theta": 1.2}); tuple-of-items
     # so the spec stays hashable
     scenario_kw: tuple[tuple[str, object], ...] = ()
@@ -85,7 +92,7 @@ class SweepSpec:
                 * len(self.r1) * len(self.r2_override)
                 * len(self.arrival_scale) * len(self.prog_fail_rate)
                 * len(self.erase_fail_rate) * len(self.max_read_retries)
-                * len(self.fault_seed))
+                * len(self.fault_seed) * len(self.gc_objective))
 
     def faults_on(self) -> bool:
         """Any fault axis off its fault-free default -> the grid batches
@@ -111,6 +118,7 @@ class RunSpec:
     erase_fail_rate: float = 0.0
     max_read_retries: int = -1
     fault_seed: int = 0
+    gc_objective: str = "min_valid"
 
     def tag(self) -> str:
         parts = [
@@ -133,16 +141,21 @@ class RunSpec:
             parts.append(f"mrr{self.max_read_retries}")
         if self.fault_seed != 0:
             parts.append(f"fseed{self.fault_seed}")
+        if self.gc_objective != "min_valid":
+            parts.append(f"gc_{self.gc_objective}")
         return "_".join(parts)
 
 
 def expand(spec: SweepSpec) -> list[RunSpec]:
     return [
-        RunSpec(spec.scenario, pol, pe, seed, r1, r2, scale, pf, ef, mrr, fs)
-        for pol, pe, seed, r1, r2, scale, pf, ef, mrr, fs in itertools.product(
+        RunSpec(spec.scenario, pol, pe, seed, r1, r2, scale, pf, ef, mrr, fs,
+                gco)
+        for pol, pe, seed, r1, r2, scale, pf, ef, mrr, fs, gco in
+        itertools.product(
             spec.policies, spec.initial_pe, spec.seeds, spec.r1,
             spec.r2_override, spec.arrival_scale, spec.prog_fail_rate,
-            spec.erase_fail_rate, spec.max_read_retries, spec.fault_seed
+            spec.erase_fail_rate, spec.max_read_retries, spec.fault_seed,
+            spec.gc_objective
         )
     ]
 
@@ -424,6 +437,12 @@ def run_sweep(spec: SweepSpec, threads: int = 4, verbose: bool = False,
                     np.asarray([r.fault_seed for r in padded], np.int32)
                     if faults_on else None
                 ),
+                gc_objective=(
+                    np.asarray(
+                        [reclaim.GC_OBJECTIVE_CODES[r.gc_objective]
+                         for r in padded], np.int32)
+                    if spec.gc_objective != ("min_valid",) else None
+                ),
             )
             if verbose:
                 where = (f"sharded over {len(devs)} devices"
@@ -497,6 +516,7 @@ def run_sweep(spec: SweepSpec, threads: int = 4, verbose: bool = False,
                 erase_fail_rate=r.erase_fail_rate,
                 max_read_retries=r.max_read_retries,
                 fault_seed=r.fault_seed,
+                gc_objective=r.gc_objective,
                 n_requests=spec.n_requests,
                 tag=r.tag(),
             )
@@ -523,34 +543,9 @@ def run_sweep(spec: SweepSpec, threads: int = 4, verbose: bool = False,
 
 # --------------------------- result artifacts ------------------------------
 
-_ROW_UNITS = {
-    "iops": "IOPS",
-    "mean_read_latency_us": "us",
-    "read_lat_p50_us": "us",
-    "read_lat_p95_us": "us",
-    "read_lat_p99_us": "us",
-    "read_lat_p999_us": "us",
-    "write_lat_p50_us": "us",
-    "write_lat_p95_us": "us",
-    "write_lat_p99_us": "us",
-    "write_lat_p999_us": "us",
-    "read_queue_delay_us": "us",
-    "read_chan_wait_us": "us",
-    "retries_per_read": "retries",
-    "capacity_gib": "GiB",
-    "capacity_loss_gib": "GiB",
-    "migrated_pages": "pages",
-    "erases": "erases",
-    "reads": "reads",
-    "writes": "writes",
-    "uncorrectable_reads": "reads",
-    "prog_fails": "failures",
-    "erase_fails": "failures",
-    "dropped_writes": "writes",
-    "bad_blocks": "blocks",
-    "obs_events_total": "events",
-    "obs_events_dropped": "events",
-}
+# Scalar metric names + units come from the single schema registry
+# (ssdsim/metrics_schema.py); the name is kept for backward compatibility.
+_ROW_UNITS = metrics_schema.row_units()
 
 
 def result_rows(res: dict, prefix: str = "sweep"):

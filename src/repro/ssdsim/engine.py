@@ -622,11 +622,9 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
                     jax.ops.segment_max(page_heat, slot_blk, num_segments=cfg.n_blocks),
                     0.0,
                 )
-                eligible_mode = jnp.where(
-                    s.block_state == st.FULL, s.block_mode, modes.QLC
-                )  # only FULL low-density blocks are demotable
-                victims, v_ok, v_tgt = reclaim.select_demotion_victims(
-                    eligible_mode, block_heat, s.block_cold_age, free_frac, rcfg
+                victims, v_ok, v_tgt = reclaim.score_victims(
+                    s, cfg, reclaim.DEMOTION, block_heat=block_heat,
+                    free_frac=free_frac, reclaim_cfg=rcfg,
                 )
                 return ftl.reclaim_victims(s, victims, v_ok, v_tgt, cfg,
                                            faults=fp)
@@ -636,7 +634,7 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
             )
 
     # ---------------- GC (fused multi-victim, deficit-aware) ----------------
-    s = ftl.gc_step(s, cfg, faults=fp)
+    s = ftl.gc_step(s, cfg, faults=fp, knobs=knobs)
 
     # clock follows the busiest die (device saturated under FIO load)
     s = s._replace(clock_ms=jnp.maximum(s.clock_ms, s.die_busy_ms.max()))
@@ -753,6 +751,24 @@ def summarize(s: st.SSDState, cfg: geometry.SimConfig, threads: int = 4):
     init_cap = cfg.n_blocks * cfg.slots_per_block * cfg.page_bytes / 2**30
     pct = telemetry.percentiles(s.lat_hist)
     wpct = telemetry.percentiles(s.w_lat_hist)
+    # ---- endurance / WAF telemetry (DESIGN.md §2E) ----
+    user_pages = float(s.n_writes)
+    reloc_pages = float(s.n_reloc_pages)
+    waf = (user_pages + reloc_pages) / user_pages if user_pages > 0 else 1.0
+    block_pe = np.asarray(s.block_pe, np.float64)
+    live = ~np.asarray(s.block_bad)
+    pe_live = block_pe[live] if live.any() else block_pe
+    block_mode_h = np.asarray(s.block_mode)
+    pe_mean_by_mode = []
+    for m in range(modes.N_MODES):
+        sel = live & (block_mode_h == m)
+        pe_mean_by_mode.append(float(block_pe[sel].mean()) if sel.any() else 0.0)
+    # lifetime projection: rated QLC endurance (the device's native mode)
+    # over the observed host write rate, discounted by the measured WAF
+    cap_bytes = cap * 2**30
+    tbw = modes.tbw_bytes(cap_bytes, modes.RATED_PE[modes.QLC], waf)
+    host_bytes_per_day = (user_pages * cfg.page_bytes
+                          / max(makespan_ms, 1e-9) * 86_400_000.0)
     return dict(
         iops=iops,
         mean_read_latency_us=mean_lat_ms * 1000.0,
@@ -781,5 +797,18 @@ def summarize(s: st.SSDState, cfg: geometry.SimConfig, threads: int = 4):
         erase_fails=float(s.n_erase_fails),
         dropped_writes=float(s.n_dropped_writes),
         bad_blocks=float(s.bad_count),
+        # endurance / WAF (DESIGN.md §2E); waf pins to 1.0 and
+        # lifetime_years to 0.0 when the run had no host writes
+        user_pages=user_pages,
+        reloc_pages=reloc_pages,
+        waf=waf,
+        pe_mean=float(pe_live.mean()),
+        pe_variance=float(pe_live.var()),
+        pe_max=float(pe_live.max()),
+        pe_mean_by_mode=pe_mean_by_mode,
+        tbw_gib=tbw / 2**30,
+        dwpd=modes.dwpd(host_bytes_per_day, cap_bytes) if user_pages > 0 else 0.0,
+        lifetime_years=(modes.lifetime_years(tbw, host_bytes_per_day)
+                        if user_pages > 0 else 0.0),
         **obs.summary(s, cfg),
     )

@@ -291,6 +291,10 @@ def _place_pages(s: st.SSDState, lpns, valid, tgt_mode, cfg: geometry.SimConfig,
         l2p=s.l2p.at[lp_idx].set(dest_slot, mode="drop"),
         p2l=s.p2l.at[dest_slot].set(lp_safe, mode="drop"),
         page_write_ms=s.page_write_ms.at[dest_slot].set(s.clock_ms, mode="drop"),
+        # every physical relocation program is a page of write amplification;
+        # counting here (the single placement core) covers GC, reclaim,
+        # conversion AND prog-fail re-placement with one counter
+        n_reloc_pages=s.n_reloc_pages + placed.sum().astype(jnp.float32),
     )
 
 
@@ -576,20 +580,24 @@ def _gc_dest_need(cfg: geometry.SimConfig, k: int) -> int:
     return MAX_DEST + (k - 1)
 
 
-def select_gc_victims(s: st.SSDState, cfg: geometry.SimConfig, k: int):
-    """Top-k GC victim selection (same shape as
-    ``reclaim.select_demotion_victims``): among reclaimable FULL blocks —
-    at least one invalid page at their current mode — the ``k`` with the
-    fewest valid pages, ties to the lowest block id. Equals ``k`` sequential
-    greedy argmin picks because relocation never creates a new reclaimable
-    block (placed blocks fill completely valid)."""
-    ppb = geometry.pages_per_block(cfg)
-    reclaimable = (s.block_state == st.FULL) & (s.block_valid < ppb[s.block_mode])
-    return reclaim.topk_victims(-s.block_valid.astype(jnp.float32), reclaimable, k)
+def select_gc_victims(s: st.SSDState, cfg: geometry.SimConfig, k: int,
+                      knobs=None):
+    """Top-k GC victim selection via the unified scorer
+    (``reclaim.score_victims``): among reclaimable FULL blocks — at least
+    one invalid page at their current mode — the ``k`` best under
+    ``cfg.gc_objective``, ties to the lowest block id. The default
+    ``"min_valid"`` objective (fewest valid pages first) equals ``k``
+    sequential greedy argmin picks because relocation never creates a new
+    reclaimable block (placed blocks fill completely valid). A traced
+    ``knobs.gc_objective`` code overrides the static objective per run."""
+    code = None if knobs is None else getattr(knobs, "gc_objective", None)
+    victims, ok, _ = reclaim.score_victims(s, cfg, cfg.gc_objective, k=k,
+                                           objective_code=code)
+    return victims, ok
 
 
 def gc_step(s: st.SSDState, cfg: geometry.SimConfig,
-            faults: flt.FaultParams | None = None):
+            faults: flt.FaultParams | None = None, knobs=None):
     """Fused greedy GC, cond-gated on the free-pool watermark: with a
     healthy pool the victim scan is skipped entirely, so GC can never fire
     above ``cfg.gc_free_threshold``. Under pressure one firing relocates up
@@ -597,11 +605,12 @@ def gc_step(s: st.SSDState, cfg: geometry.SimConfig,
     amortizing the full-device top-k, the placement unroll and the per-chunk
     dispatch over k blocks."""
     need = free_block_count(s) < cfg.gc_free_threshold
-    return lax.cond(need, lambda s_: _gc_pass(s_, cfg, faults), lambda s_: s_, s)
+    return lax.cond(need, lambda s_: _gc_pass(s_, cfg, faults, knobs),
+                    lambda s_: s_, s)
 
 
 def _gc_pass(s: st.SSDState, cfg: geometry.SimConfig,
-             faults: flt.FaultParams | None = None):
+             faults: flt.FaultParams | None = None, knobs=None):
     """One fused GC firing: top-k min-valid victims relocated in a single
     masked :func:`relocate_group` pass over the batch's dominant source
     mode (GC keeps each block's mode), cond-gated on having victims and
@@ -625,9 +634,16 @@ def _gc_pass(s: st.SSDState, cfg: geometry.SimConfig,
     true, keeping the pass bit-identical to ``gc_pass_reference``. ``k``
     victims each with >= 1 invalid page place into at most ``k`` fresh
     blocks plus the open migration block, so the placement unroll is
-    ``k + 1``."""
+    ``k + 1``.
+
+    Under the ``"lifespan"`` objective the lanes arrive ordered by *score*
+    (wear-discounted), not by projected harvest, so lane 0's ``net`` is the
+    preferred victim's harvest rather than the maximum — the deficit
+    batching then forces however many score-ordered victims the projection
+    needs, which is exactly the wear-levelled trade the objective asks
+    for."""
     k = min(max(int(cfg.gc_victims_per_pass), 1), cfg.n_blocks)
-    victims, ok = select_gc_victims(s, cfg, k)
+    victims, ok = select_gc_victims(s, cfg, k, knobs)
     vb = jnp.maximum(victims, 0)
     ppb = geometry.pages_per_block(cfg)
     vmode = s.block_mode[vb]

@@ -22,11 +22,19 @@ adds per-channel transfer clocks and multi-plane overlap.
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field, replace
 
 from repro.core import hotness, modes
 
 CHAN_MODELS = ("legacy", "lattice")
+
+# Statically configurable GC victim objectives. Mirrors
+# reclaim.GC_OBJECTIVES (kept as a literal here so the config layer stays
+# importable without jax; cross-checked by tests/test_endurance.py).
+GC_OBJECTIVES = ("min_valid", "lifespan")
+
+_ALIAS_WARNED: set[str] = set()
 
 BASELINE = 0  # multi-read-retry QLC, no mode awareness
 HOTNESS = 1  # temperature-only 3-mode conversion (paper's comparison)
@@ -83,6 +91,16 @@ class SimConfig:
     erase_fail_rate: float = 0.0  # per block erase -> bad-block retirement
     fault_seed: int = 0  # stream selector for the deterministic draws
 
+    # --- GC victim objective (DESIGN.md §2E) ---
+    # "min_valid": classic fewest-valid-pages-first (the pinned default);
+    # "lifespan": score = α·invalid_ratio − β·migration_cost − γ·pe_norm,
+    # trading a little immediate harvest for flatter wear. Also selectable
+    # per-run as a traced RunKnobs sweep axis (RunKnobs.gc_objective).
+    gc_objective: str = "min_valid"
+    gc_alpha: float = 1.0
+    gc_beta: float = 0.5
+    gc_gamma: float = 0.3
+
     # --- policy ---
     policy: int = RARO
     r1: int = 1
@@ -98,6 +116,11 @@ class SimConfig:
             raise ValueError(
                 f"chan_model must be one of {CHAN_MODELS}, "
                 f"got {self.chan_model!r}"
+            )
+        if self.gc_objective not in GC_OBJECTIVES:
+            raise ValueError(
+                f"gc_objective must be one of {GC_OBJECTIVES}, "
+                f"got {self.gc_objective!r}"
             )
 
     @property
@@ -164,11 +187,22 @@ class SimConfig:
             self.plane_of_block(block)
 
     def lun_of_block(self, block):
-        """Legacy alias: the historical LUN of a block is its die."""
+        """Deprecated legacy alias — use :meth:`die_of_block` (the
+        historical LUN of a block is its die). Warns once per process; no
+        ``src/`` module may call it (grep-enforced by tests)."""
+        if "lun_of_block" not in _ALIAS_WARNED:
+            _ALIAS_WARNED.add("lun_of_block")
+            warnings.warn("SimConfig.lun_of_block is deprecated; use die_of_block",
+                          DeprecationWarning, stacklevel=2)
         return self.die_of_block(block)
 
     def channel_of_lun(self, lun):
-        """Legacy alias for :meth:`channel_of_die`."""
+        """Deprecated legacy alias — use :meth:`channel_of_die`. Warns once
+        per process; no ``src/`` module may call it (grep-enforced)."""
+        if "channel_of_lun" not in _ALIAS_WARNED:
+            _ALIAS_WARNED.add("channel_of_lun")
+            warnings.warn("SimConfig.channel_of_lun is deprecated; use channel_of_die",
+                          DeprecationWarning, stacklevel=2)
         return self.channel_of_die(lun)
 
     def with_policy(self, policy: int) -> "SimConfig":

@@ -47,6 +47,12 @@ class RunKnobs(NamedTuple):
     erase_fail_rate: jnp.ndarray | None = None
     max_read_retries: jnp.ndarray | None = None
     fault_seed: jnp.ndarray | None = None
+    # GC victim-objective axis (DESIGN.md §2E): int32 code per
+    # ``reclaim.GC_OBJECTIVE_CODES`` (0 = min_valid, 1 = lifespan). None
+    # keeps the static ``cfg.gc_objective`` formula; code 0 traces the
+    # identical selection ops as the static default, so a sweep can mix
+    # objectives in one compiled program without perturbing the baseline.
+    gc_objective: jnp.ndarray | None = None
 
 
 def thresholds_for(cfg: geometry.SimConfig, pe_cycles, knobs: RunKnobs | None = None):

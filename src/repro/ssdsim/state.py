@@ -100,6 +100,11 @@ class SSDState(NamedTuple):
     n_writes: jnp.ndarray
     n_retries: jnp.ndarray
     n_migrated_pages: jnp.ndarray
+    # physical relocation programs, counted at the single placement core
+    # (ftl._place_pages) so GC / reclaim / conversion / prog-fail
+    # re-placement all land in one WAF denominator-exact counter:
+    # WAF = (n_writes + n_reloc_pages) / n_writes (DESIGN.md §2E)
+    n_reloc_pages: jnp.ndarray
     n_erases: jnp.ndarray
     n_conversions: jnp.ndarray  # (3,3) from-mode x to-mode counts
     # fault/recovery counters (DESIGN.md §2D; all stay exactly 0.0 on the
@@ -178,6 +183,7 @@ def init_state(cfg: geometry.SimConfig, initial_pe=None) -> SSDState:
         n_writes=jnp.float32(0.0),
         n_retries=jnp.float32(0.0),
         n_migrated_pages=jnp.float32(0.0),
+        n_reloc_pages=jnp.float32(0.0),
         n_erases=jnp.float32(0.0),
         n_conversions=jnp.zeros((3, 3), jnp.float32),
         n_uncorrectable=jnp.float32(0.0),
