@@ -6,9 +6,11 @@ The paper's headline figures (13-18) come from mixed traces, so this script
 is the regression guard for the vectorized write path, the fused reclaim
 pass, the fused multi-victim GC (the ``gc_pressure`` section runs a
 write-heavy trace against a nearly-full device so GC fires on virtually
-every chunk), the armed fault path (``mixed_faults``), and the lattice
-timing model's second Lindley pass (``channel_contention``: open-loop zipf
-reads funneling 4 dies into 1 channel under ``chan_model="lattice"``): it
+every chunk), the armed fault path (``mixed_faults``), the full wear-correlated
+reliability model (``wearout``: wear-scaled draws, die-parity rebuild,
+finite spare pool), and the lattice timing model's second Lindley pass
+(``channel_contention``: open-loop zipf reads funneling 4 dies into 1
+channel under ``chan_model="lattice"``): it
 reports steady-state chunks/sec and wall-clock per chunk (compile excluded,
 measured separately) and emits a ``BENCH_engine.json`` artifact in the same
 ``name,value,unit`` row format as the rest of the harness.
@@ -42,6 +44,14 @@ FAULT_MAX_READ_RETRIES = 6
 FAULT_PROG_FAIL_RATE = 0.01
 FAULT_ERASE_FAIL_RATE = 0.02
 FAULT_SEED = 1
+
+# wearout section knobs (DESIGN.md §2D, wear-correlated): mixed_faults plus
+# the wear curve, probabilistic read faults, die-parity rebuild and a finite
+# spare pool — prices the full reliability model (wear-multiplied draws,
+# rebuild lattice charges, spare accounting, degraded-mode gating)
+WEAROUT_READ_FAIL_RATE = 0.002
+WEAROUT_WEAR_SLOPE = 8.0
+WEAROUT_SPARE_BLOCKS = 12
 
 # channel_contention workload shape (DESIGN.md §2C): read-heavy open-loop
 # Zipf trace at an offered rate that keeps the one shared bus saturated, so
@@ -164,12 +174,23 @@ def _sections(tiny: bool, n_requests: int):
         erase_fail_rate=FAULT_ERASE_FAIL_RATE,
         fault_seed=FAULT_SEED,
     )
+    # same geometry + trace with the whole wear-correlated reliability model
+    # armed on top of mixed_faults (wear curve, read faults, parity rebuild,
+    # finite spares): the flt/wear pair prices the wear-model increment
+    wear_cfg = dataclasses.replace(
+        flt_cfg,
+        read_fail_rate=WEAROUT_READ_FAIL_RATE,
+        fault_wear_slope=WEAROUT_WEAR_SLOPE,
+        parity_rebuild=True,
+        spare_blocks=WEAROUT_SPARE_BLOCKS,
+    )
     return {
         "read_only": (
             cfg, workload.zipf_read_trace(cfg, n_requests, 1.2, seed=1), False),
         "mixed": (cfg, mixed_trace, True),
         "mixed_obs_full": (obs_cfg, mixed_trace, True),
         "mixed_faults": (flt_cfg, mixed_trace, True),
+        "wearout": (wear_cfg, mixed_trace, True),
         "gc_pressure": (
             gc_cfg,
             workload.mixed_trace(gc_cfg, n_requests, 1.2, seed=1,
@@ -318,6 +339,13 @@ def main() -> None:
                 "prog_fail_rate": FAULT_PROG_FAIL_RATE,
                 "erase_fail_rate": FAULT_ERASE_FAIL_RATE,
                 "fault_seed": FAULT_SEED,
+            },
+            "wearout": {
+                "read_fail_rate": WEAROUT_READ_FAIL_RATE,
+                "fault_wear_slope": WEAROUT_WEAR_SLOPE,
+                "parity_rebuild": True,
+                "spare_blocks": WEAROUT_SPARE_BLOCKS,
+                "base": "mixed_faults config + trace",
             },
             "channel_contention": {
                 "n_channels": cc_cfg.n_channels,

@@ -215,12 +215,52 @@ def endurance_report(doc: dict) -> list[str]:
     return lines
 
 
+def wearout_report(doc: dict) -> list[str]:
+    """Wear-correlated failure dashboard (DESIGN.md §2D): reliability
+    counters — uncorrectables, rebuilds, data loss, bad blocks, spare drain
+    — per (policy, GC objective, wear slope, drive age) cell, plus the
+    lifespan-vs-min-valid failure ratios at the worst cell."""
+    cfg = doc.get("config", {})
+    lines = [
+        "### Wear-correlated failure dashboard",
+        "",
+        f"`{cfg.get('scenario', '?')}` × {cfg.get('n_runs', '?')} runs; "
+        f"wear slope ∈ {cfg.get('fault_wear_slope', '?')} "
+        f"(power {cfg.get('fault_wear_power', '?')}), "
+        f"parity rebuild on, spare pool "
+        f"{cfg.get('spare_blocks', '?')} blocks",
+        "",
+        "| policy | GC objective | wear slope | P/E₀ | uncorr | rebuilds "
+        "| data loss | bad blks | spares left | degraded wr | read p99 µs "
+        "| WAF |",
+        "|---|---|---:|---:|---:|---:|---:|---:|---:|---:|---:|---:|",
+    ]
+    for p in doc.get("frontier", []):
+        lines.append(
+            f"| {p['policy']} | {p['gc_objective']} "
+            f"| {p['fault_wear_slope']:g} | {p['initial_pe']} "
+            f"| {_fmt(p['uncorrectable_reads'])} | {_fmt(p['rebuilds'])} "
+            f"| {_fmt(p['data_loss'])} | {_fmt(p['bad_blocks'])} "
+            f"| {_fmt(p['spares_remaining'])} | {_fmt(p['degraded_writes'])} "
+            f"| {_fmt(p['read_lat_p99_us'])} | {p['waf']:.4f} |"
+        )
+    heads = [(n, v, un) for n, v, un in doc.get("rows", [])
+             if "lifespan_vs_min_valid" in n]
+    if heads:
+        lines += ["", "**Lifespan ÷ min-valid failure ratios "
+                      "(wear-correlated, old device)**", "",
+                  "| metric | ratio |", "|---|---:|"]
+        lines += [f"| `{n}` | {float(v):.4f}{un} |" for n, v, un in heads]
+    return lines
+
+
 RENDERERS = {
     "BENCH_engine.json": engine_report,
     "BENCH_latency.json": latency_report,
     "BENCH_sweep.json": sweep_report,
     "BENCH_obs.json": obs_report,
     "BENCH_endurance.json": endurance_report,
+    "BENCH_wearout.json": wearout_report,
 }
 
 

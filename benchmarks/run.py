@@ -75,6 +75,12 @@ def main() -> None:
             8_192 if q else 24_576,
             out_dir=args.artifacts,
             devices=args.devices)),
+        # named so `--only sweep` also matches it: the wear-correlated
+        # failure dashboard (rebuilds / data loss / spare drain)
+        ("wearout_sweep", lambda: sweep_bench.sweep_wearout(
+            8_192 if q else 24_576,
+            out_dir=args.artifacts,
+            devices=args.devices)),
         ("tiered_kv", lambda: tiered_kv.kv_policy_comparison(24 if q else 48)),
     ]
 

@@ -202,6 +202,121 @@ def sweep_endurance(n_requests=24_576, out_dir=None, devices=None):
     return rows
 
 
+def _wearout_frontier(results):
+    """Collapse runs to one failure-dashboard cell per (policy,
+    gc_objective, wear slope, pe): reliability counters + tail latency."""
+    cells = sorted({(r["run"]["policy"], r["run"]["gc_objective"],
+                     r["run"]["fault_wear_slope"], r["run"]["initial_pe"])
+                    for r in results})
+    points = []
+    for pol, gco, slope, pe in cells:
+        sel = [r for r in results
+               if (r["run"]["policy"], r["run"]["gc_objective"],
+                   r["run"]["fault_wear_slope"], r["run"]["initial_pe"])
+               == (pol, gco, slope, pe)]
+        mean = lambda k: float(np.mean([r[k] for r in sel]))  # noqa: E731
+        points.append({
+            "policy": pol,
+            "gc_objective": gco,
+            "fault_wear_slope": slope,
+            "initial_pe": pe,
+            "uncorrectable_reads": mean("uncorrectable_reads"),
+            "rebuilds": mean("rebuilds"),
+            "data_loss": mean("data_loss"),
+            "bad_blocks": mean("bad_blocks"),
+            "spares_remaining": mean("spares_remaining"),
+            "degraded_writes": mean("degraded_writes"),
+            "dropped_writes": mean("dropped_writes"),
+            "read_lat_p99_us": mean("read_lat_p99_us"),
+            "waf": mean("waf"),
+            "pe_max": mean("pe_max"),
+        })
+    return points
+
+
+def sweep_wearout(n_requests=24_576, out_dir=None, devices=None):
+    """Wear-correlated failure section rows (DESIGN.md §2D): the
+    ``configs.raro_ssd.wearout_sweep`` grid — {baseline, RARO} ×
+    {min-valid, lifespan} GC × {flat, wear-correlated} rates × drive age
+    with die-parity rebuild and a finite spare pool — reporting the failure
+    dashboard (uncorrectables / rebuilds / data loss / spare drain /
+    degraded writes) alongside tail latency, plus headline
+    lifespan-vs-min-valid failure ratios at the wear-correlated points.
+    Writes the committed ``BENCH_wearout.json`` when ``out_dir`` is set."""
+    from repro.configs import raro_ssd
+    from repro.experiments import sweep
+
+    spec = raro_ssd.wearout_sweep(n_requests=n_requests)
+    res = sweep.run_sweep(spec, verbose=True, devices=devices)
+    rows = []
+    for r in res:
+        rows += sweep.result_rows(r, prefix="wearout")
+
+    frontier = _wearout_frontier(res)
+    for p in frontier:
+        stem = (f"wearout/{p['policy']}_gc_{p['gc_objective']}"
+                f"_wear{p['fault_wear_slope']:g}_pe{p['initial_pe']}")
+        rows.append((f"{stem}/uncorrectable_reads",
+                     p["uncorrectable_reads"], "reads"))
+        rows.append((f"{stem}/rebuilds", p["rebuilds"], "rebuilds"))
+        rows.append((f"{stem}/data_loss", p["data_loss"], "stripes"))
+        rows.append((f"{stem}/bad_blocks", p["bad_blocks"], "blocks"))
+        rows.append((f"{stem}/spares_remaining",
+                     p["spares_remaining"], "blocks"))
+        rows.append((f"{stem}/read_lat_p99_us", p["read_lat_p99_us"], "us"))
+    # headline: what lifespan-aware GC buys on the failure trajectories at
+    # the wear-correlated high-age points (the dashboard's thesis)
+    slope_hi = max(p["fault_wear_slope"] for p in frontier)
+    pe_hi = max(p["initial_pe"] for p in frontier)
+    for pol in sorted({p["policy"] for p in frontier}):
+        by_obj = {}
+        for obj in ("min_valid", "lifespan"):
+            v = [p for p in frontier
+                 if (p["policy"], p["gc_objective"], p["fault_wear_slope"],
+                     p["initial_pe"]) == (pol, obj, slope_hi, pe_hi)]
+            if v:
+                by_obj[obj] = v[0]
+        if len(by_obj) == 2:
+            for metric in ("uncorrectable_reads", "data_loss", "bad_blocks"):
+                a = by_obj["lifespan"][metric]
+                b = by_obj["min_valid"][metric]
+                rows.append(
+                    (f"wearout/{pol}/lifespan_vs_min_valid_{metric}",
+                     float(a / max(b, 1e-12)), "x")
+                )
+
+    if out_dir is not None:
+        out = Path(out_dir)
+        out.mkdir(parents=True, exist_ok=True)
+        doc = {
+            "bench": "wearout",
+            "config": {
+                "scenario": spec.scenario,
+                "n_requests": spec.n_requests,
+                "n_runs": spec.n_runs(),
+                "policies": sorted({r["run"]["policy"] for r in res}),
+                "gc_objectives": list(spec.gc_objective),
+                "initial_pe": list(spec.initial_pe),
+                "fault_wear_slope": list(spec.fault_wear_slope),
+                "fault_wear_power": spec.base.fault_wear_power,
+                "read_fail_rate": list(spec.read_fail_rate),
+                "prog_fail_rate": list(spec.prog_fail_rate),
+                "erase_fail_rate": list(spec.erase_fail_rate),
+                "max_read_retries": list(spec.max_read_retries),
+                "spare_blocks": list(spec.spare_blocks),
+                "parity_rebuild": [bool(v) for v in spec.parity_rebuild],
+            },
+            "frontier": frontier,
+            "rows": [list(r) for r in rows],
+        }
+        p = out / "BENCH_wearout.json"
+        p.write_text(json.dumps(doc, indent=1, sort_keys=True))
+        print(f"# wrote {p}", flush=True)
+        paths = sweep.write_artifacts(res, out_dir, prefix="wearout")
+        print(f"# wrote {len(paths)} BENCH_*.json artifacts to {out_dir}", flush=True)
+    return rows
+
+
 # ------------------------- sharded scaling bench ---------------------------
 
 

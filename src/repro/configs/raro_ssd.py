@@ -106,6 +106,51 @@ def endurance_sweep(scenario: str = "fault_storm",
     )
 
 
+def wearout_sweep(scenario: str = "fault_storm",
+                  n_requests: int = 24_576,
+                  stages=("young", "old"), seeds=(0,),
+                  fault_wear_slope=(0.0, 8.0),
+                  gc_objectives=("min_valid", "lifespan"),
+                  spare_blocks: int = 12):
+    """Wear-correlated failure frontier (DESIGN.md §2D, wear-correlated):
+    {baseline, RARO} × {min-valid, lifespan GC} × {flat, wear-correlated
+    rates} × drive age on the write-heavy endurance geometry, with
+    die-parity rebuild recovery armed and a finite over-provisioning spare
+    pool, so every reliability mechanism of the model is exercised at once:
+    erase failures retire blocks and drain spares, uncorrectable reads
+    trigger stripe rebuilds (second faults count as data loss), and pool
+    exhaustion flips the drive read-only. The flat-rate points
+    (``fault_wear_slope = 0``) ride the same compiled batch and pin the
+    PR-7 behavior; the wear-correlated points show failure trajectories
+    bending up with age — where lifespan-aware GC's flatter worst-block
+    wear should visibly buy fewer uncorrectables and data-loss events than
+    min-valid on the old device. Rendered as the failure dashboard in
+    ``benchmarks/report.py`` from ``BENCH_wearout.json``."""
+    from repro.experiments.sweep import SweepSpec
+
+    return SweepSpec(
+        scenario=scenario,
+        n_requests=n_requests,
+        policies=(BASELINE, RARO),
+        initial_pe=tuple(STAGE_PE[s] for s in stages),
+        seeds=tuple(seeds),
+        prog_fail_rate=(0.002,),
+        erase_fail_rate=(0.02,),
+        max_read_retries=(8,),
+        read_fail_rate=(0.0005,),
+        fault_wear_slope=tuple(fault_wear_slope),
+        parity_rebuild=(True,),
+        spare_blocks=(spare_blocks,),
+        gc_objective=tuple(gc_objectives),
+        base=SimConfig(
+            blocks_per_plane=64, slots_per_block=256, n_logical=57_344,
+            chunk=256, migrate_pages_per_chunk=64,
+            max_conversions_per_chunk=4, gc_free_threshold=24,
+            gc_victims_per_pass=8, device_age_h=24.0,
+        ),
+    )
+
+
 def latency_load_sweep(scenario: str = "hammer_openloop",
                        n_requests: int = 80_000,
                        rate_iops: float = 50_000.0,

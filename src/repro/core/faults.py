@@ -1,21 +1,48 @@
 """Deterministic fault-injection model (DESIGN.md §2D).
 
 The dominant NAND field-failure modes firmware must survive (Cai et al.'s
-error-characterization survey, PAPERS.md) are injected as three device-level
+error-characterization survey, PAPERS.md) are injected as device-level
 fault classes, all jit/vmap/shard_map-safe with static shapes:
 
   uncorrectable reads — a read whose Eq.-3 retry count exceeds the device
-      retry budget (``max_read_retries``) does not decode on-chip: the
-      controller burns the full retry budget, then pays an ECC
-      soft-decode/recovery penalty (``read_recovery_us``) and the read is
-      counted in ``SSDState.n_uncorrectable``.
+      retry budget (``max_read_retries``) does not decode on-chip; on top
+      of that, every read draws a wear-scaled Bernoulli uncorrectable with
+      probability ``read_fail_rate`` (the probabilistic tail Cai et al.
+      attribute to retention/ read-disturb excursions). Recovery is either
+      a flat ECC soft-decode penalty (``read_recovery_us``) or, when
+      ``parity_rebuild`` is armed, a die-parity stripe rebuild (below);
+      either way the read completes and is counted in
+      ``SSDState.n_uncorrectable``.
   program failures — each user-path page program fails with probability
       ``prog_fail_rate``; the failed slot is wasted (programmed but invalid)
       and the page is re-placed through the shared ``ftl._place_pages``
       machinery onto a fresh open block.
   erase failures — each block erase fails with probability
       ``erase_fail_rate``; the block is retired into the bad-block map
-      (``SSDState.block_bad``, state ``BAD``) and never allocated again.
+      (``SSDState.block_bad``, state ``BAD``), never allocated again, and
+      charged against the over-provisioning spare pool
+      (``SSDState.spare_count``).
+
+**Wear-correlated rates.** Each class's base rate is scaled per-operation by
+:func:`wear_mult` — ``1 + slope * (pe / rated)^power`` — evaluated from the
+per-block P/E count threaded into every draw, so a worn block fails more
+often than a fresh one (the nonlinear wear→error coupling of Cai et al. and
+the ``rber.py`` wear-stage philosophy, continuous instead of banded). A
+``wear_slope`` of exactly 0.0 multiplies every rate by exactly 1.0, which is
+bit-exact in float32 — the flat-rate (PR 7) engine is the zero-slope point
+of the same compiled program.
+
+**Die-parity rebuild.** With ``parity_rebuild`` armed, an uncorrectable read
+is recovered by reconstructing the page from its die-parity stripe: one
+sense on every peer die plus their page transfers serialized on the channel
+bus (:func:`recovery_us` gives the victim lane's added service time; the
+engine additionally charges the peer dies/channels on the timing lattice).
+A second uncorrectable among the peer reads during the rebuild means the
+stripe cannot be reconstructed — :func:`rebuild_second_fault` draws that
+event (probability ``1 - (1 - q)^n_peers`` with ``q`` the wear-scaled
+``read_fail_rate``) and the engine counts it as true data loss
+(``n_data_loss``). The sim keeps serving the stale page; no mapping entry
+is harmed.
 
 Randomness is a stateless counter-style hash (same construction as
 ``rber.page_variation``) keyed on *what* is failing and the block's P/E
@@ -30,7 +57,7 @@ Two activation paths share the model:
   traced  — ``RunKnobs`` fault fields (the sweep runner's fault-rate axis);
       a whole grid of fault rates shares one compiled program, and a traced
       rate of exactly zero reproduces the fault-free engine output bit for
-      bit (pinned by ``tests/test_faults.py``).
+      bit (pinned by ``tests/test_faults.py`` / ``tests/test_wearout.py``).
 
 ``params_for`` resolves the two into one :class:`FaultParams` bundle (or
 ``None`` when fault injection is statically off, in which case no fault ops
@@ -43,20 +70,32 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
+from repro.core import modes
+
 
 class FaultParams(NamedTuple):
     """Resolved fault knobs for one run (scalars, possibly traced).
 
-    ``max_read_retries < 0`` disables the uncorrectable-read path for the
-    run even when program/erase faults are active; rates of 0.0 never draw
-    a failure. ``read_recovery_us`` is always static (from ``SimConfig``).
+    ``max_read_retries < 0`` disables the retry-budget uncorrectable path
+    for the run even when program/erase faults are active; rates of 0.0
+    never draw a failure. ``read_recovery_us`` and ``wear_power`` are
+    always static (from ``SimConfig``).
     """
 
-    max_read_retries: jnp.ndarray  # i32; < 0 = reads always decode
+    max_read_retries: jnp.ndarray  # i32; < 0 = budget path off
     prog_fail_rate: jnp.ndarray  # f32 probability per page program
     erase_fail_rate: jnp.ndarray  # f32 probability per block erase
+    read_fail_rate: jnp.ndarray  # f32 probability per page read
+    wear_slope: jnp.ndarray  # f32 wear-curve gain; 0.0 = flat (PR 7) rates
+    parity_rebuild: jnp.ndarray  # i32 0/1; 1 = die-parity rebuild recovery
     seed: jnp.ndarray  # i32 run-level stream selector
-    read_recovery_us: float  # static ECC soft-decode/recovery penalty
+    read_recovery_us: float  # static flat ECC soft-decode penalty
+    wear_power: float  # static wear-curve knee exponent
+
+
+def _opt(value, default, dtype):
+    """Knob field, falling back to the static config value when unset."""
+    return jnp.asarray(default if value is None else value, dtype)
 
 
 def params_for(cfg, knobs=None) -> FaultParams | None:
@@ -74,22 +113,35 @@ def params_for(cfg, knobs=None) -> FaultParams | None:
             max_read_retries=jnp.asarray(knobs.max_read_retries, jnp.int32),
             prog_fail_rate=jnp.asarray(knobs.prog_fail_rate, jnp.float32),
             erase_fail_rate=jnp.asarray(knobs.erase_fail_rate, jnp.float32),
+            read_fail_rate=_opt(knobs.read_fail_rate,
+                                cfg.read_fail_rate, jnp.float32),
+            wear_slope=_opt(knobs.fault_wear_slope,
+                            cfg.fault_wear_slope, jnp.float32),
+            parity_rebuild=_opt(knobs.parity_rebuild,
+                                cfg.parity_rebuild, jnp.int32),
             seed=jnp.asarray(knobs.fault_seed, jnp.int32),
             read_recovery_us=cfg.read_recovery_us,
+            wear_power=cfg.fault_wear_power,
         )
     return FaultParams(
         max_read_retries=jnp.int32(cfg.max_read_retries),
         prog_fail_rate=jnp.float32(cfg.prog_fail_rate),
         erase_fail_rate=jnp.float32(cfg.erase_fail_rate),
+        read_fail_rate=jnp.float32(cfg.read_fail_rate),
+        wear_slope=jnp.float32(cfg.fault_wear_slope),
+        parity_rebuild=jnp.int32(int(cfg.parity_rebuild)),
         seed=jnp.int32(cfg.fault_seed),
         read_recovery_us=cfg.read_recovery_us,
+        wear_power=cfg.fault_wear_power,
     )
 
 
-# draw-stream selectors: program and erase failures must never share a draw
-# even when keyed on the same (id, pe) pair
+# draw-stream selectors: the fault classes must never share a draw even when
+# keyed on the same (id, pe) pair
 STREAM_PROG = jnp.uint32(0x50524F47)  # "PROG"
 STREAM_ERASE = jnp.uint32(0x45525345)  # "ERSE"
+STREAM_READ = jnp.uint32(0x52454144)  # "READ"
+STREAM_REBUILD = jnp.uint32(0x52424C44)  # "RBLD"
 
 
 def _mix(h):
@@ -105,11 +157,11 @@ def _mix(h):
 def uniform01(ident, cycle, seed, stream):
     """Stateless uniform (0, 1) draw keyed on (id, P/E cycle, seed, stream).
 
-    ``ident`` is the failing entity (slot for programs, block for erases)
-    and ``cycle`` its block's P/E count at the time, so re-using a block
-    after an erase draws fresh outcomes — a schedule, not a fixed per-block
-    fate. Same hash family as ``rber.page_variation``; deterministic under
-    jit/vmap and identical across devices.
+    ``ident`` is the failing entity (slot for programs/reads, block for
+    erases) and ``cycle`` its block's P/E count at the time, so re-using a
+    block after an erase draws fresh outcomes — a schedule, not a fixed
+    per-block fate. Same hash family as ``rber.page_variation``;
+    deterministic under jit/vmap and identical across devices.
     """
     h = jnp.asarray(ident, jnp.uint32) * jnp.uint32(0x9E3779B9)
     h = _mix(h ^ (jnp.asarray(cycle, jnp.uint32) * jnp.uint32(0x68E31DA4)))
@@ -135,11 +187,74 @@ def block_entity(block, n_dies: int, planes: int):
     return (idx * planes + plane) * n_dies + die
 
 
-def prog_fails(p: FaultParams, slots, pe):
+def wear_mult(p: FaultParams, pe, rated):
+    """Wear-curve rate multiplier ``1 + slope * (pe / rated)^power``.
+
+    ``rated`` is the rated endurance of the failing block's *current* mode
+    (``modes.PE_LIMIT[mode]``): a QLC block at pe=900 sits at 90% of rated
+    wear while an SLC block at the same count has barely aged. The power
+    knee (static ``wear_power``, default 4) keeps young blocks near the
+    base rate and bends failure probability up super-linearly toward
+    end-of-life, matching Cai et al.'s P/E-vs-RBER curves. A slope of
+    exactly 0.0 yields exactly 1.0 — multiplying any float32 rate by it is
+    a bit-exact no-op, which is what pins the flat-rate engine.
+    """
+    frac = jnp.asarray(pe, jnp.float32) / jnp.asarray(rated, jnp.float32)
+    frac = jnp.maximum(frac, 0.0)
+    return 1.0 + p.wear_slope * jnp.power(frac, jnp.float32(p.wear_power))
+
+
+def prog_fails(p: FaultParams, slots, pe, rated):
     """Per-lane program-failure draw for slots about to be programmed."""
-    return uniform01(slots, pe, p.seed, STREAM_PROG) < p.prog_fail_rate
+    rate = p.prog_fail_rate * wear_mult(p, pe, rated)
+    return uniform01(slots, pe, p.seed, STREAM_PROG) < rate
 
 
-def erase_fails(p: FaultParams, blocks, pe):
+def erase_fails(p: FaultParams, blocks, pe, rated):
     """Per-lane erase-failure draw for blocks about to be erased."""
-    return uniform01(blocks, pe, p.seed, STREAM_ERASE) < p.erase_fail_rate
+    rate = p.erase_fail_rate * wear_mult(p, pe, rated)
+    return uniform01(blocks, pe, p.seed, STREAM_ERASE) < rate
+
+
+def read_fails(p: FaultParams, slots, pe, rated):
+    """Per-lane probabilistic-uncorrectable draw for slots being read."""
+    rate = p.read_fail_rate * wear_mult(p, pe, rated)
+    return uniform01(slots, pe, p.seed, STREAM_READ) < rate
+
+
+def rebuild_second_fault(p: FaultParams, slots, pe, rated, n_peers: int):
+    """Second-uncorrectable-during-rebuild draw (true data loss).
+
+    A die-parity rebuild reads ``n_peers`` stripe peers; if any of those
+    reads is itself uncorrectable the stripe cannot be reconstructed. Each
+    peer fails with the same wear-scaled probabilistic-uncorrectable rate
+    ``q`` as any read (the victim's own P/E count stands in for the
+    stripe's wear — peers erase in near-lockstep under striped
+    allocation), so the stripe is lost with ``1 - (1 - q)^n_peers``. One
+    draw per victim lane on a dedicated stream; at ``read_fail_rate == 0``
+    the loss probability is exactly 0 and the draw can never fire.
+    """
+    q = jnp.clip(p.read_fail_rate * wear_mult(p, pe, rated), 0.0, 1.0)
+    loss_p = 1.0 - jnp.power(1.0 - q, jnp.float32(n_peers))
+    return uniform01(slots, pe, p.seed, STREAM_REBUILD) < loss_p
+
+
+def recovery_us(p: FaultParams, mode, cfg):
+    """Victim-lane recovery time of one uncorrectable read, microseconds.
+
+    Flat path: the static ECC soft-decode constant (PR 7). Parity path: the
+    rebuild critical path as seen by the victim read — the peer senses
+    overlap across dies (one read latency at the victim's mode; stripe
+    peers are modeled at the same mode), then every peer page crosses a
+    channel bus, of which ``cfg.rebuild_xfer_chain`` serialize behind each
+    other on the busiest bus. The peer dies'/channels' own busy time is
+    charged separately on the timing lattice by the engine. A one-die
+    geometry has no stripe peers, so parity rebuild degenerates to the
+    flat constant there.
+    """
+    flat = jnp.float32(p.read_recovery_us)
+    if cfg.n_dies < 2:
+        return jnp.broadcast_to(flat, jnp.shape(mode))
+    rebuild = (modes.READ_LATENCY_US[mode]
+               + jnp.float32(cfg.rebuild_xfer_chain * cfg.transfer_us))
+    return jnp.where(p.parity_rebuild > 0, rebuild, flat)

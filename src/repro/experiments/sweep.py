@@ -76,6 +76,14 @@ class SweepSpec:
     erase_fail_rate: tuple[float, ...] = (0.0,)
     max_read_retries: tuple[int, ...] = (-1,)
     fault_seed: tuple[int, ...] = (0,)
+    # wear-coupled reliability axes (DESIGN.md §2D, wear-correlated): ride
+    # the fault-knob activation above; their fault-free defaults (rate 0.0,
+    # slope 0.0, rebuild off, unbounded spares) trace bit-identically to the
+    # flat-rate program, so mixed grids stay safe
+    read_fail_rate: tuple[float, ...] = (0.0,)
+    fault_wear_slope: tuple[float, ...] = (0.0,)
+    parity_rebuild: tuple[bool, ...] = (False,)
+    spare_blocks: tuple[int, ...] = (-1,)
     # GC victim-objective axis (DESIGN.md §2E), batched through
     # RunKnobs.gc_objective as integer codes: while the axis sits at its
     # default the knob stays None (no formula-select traced); a mixed axis
@@ -92,7 +100,9 @@ class SweepSpec:
                 * len(self.r1) * len(self.r2_override)
                 * len(self.arrival_scale) * len(self.prog_fail_rate)
                 * len(self.erase_fail_rate) * len(self.max_read_retries)
-                * len(self.fault_seed) * len(self.gc_objective))
+                * len(self.fault_seed) * len(self.read_fail_rate)
+                * len(self.fault_wear_slope) * len(self.parity_rebuild)
+                * len(self.spare_blocks) * len(self.gc_objective))
 
     def faults_on(self) -> bool:
         """Any fault axis off its fault-free default -> the grid batches
@@ -100,7 +110,11 @@ class SweepSpec:
         return (self.prog_fail_rate != (0.0,)
                 or self.erase_fail_rate != (0.0,)
                 or self.max_read_retries != (-1,)
-                or self.fault_seed != (0,))
+                or self.fault_seed != (0,)
+                or self.read_fail_rate != (0.0,)
+                or self.fault_wear_slope != (0.0,)
+                or self.parity_rebuild != (False,)
+                or self.spare_blocks != (-1,))
 
 
 @dataclass(frozen=True)
@@ -118,6 +132,10 @@ class RunSpec:
     erase_fail_rate: float = 0.0
     max_read_retries: int = -1
     fault_seed: int = 0
+    read_fail_rate: float = 0.0
+    fault_wear_slope: float = 0.0
+    parity_rebuild: bool = False
+    spare_blocks: int = -1
     gc_objective: str = "min_valid"
 
     def tag(self) -> str:
@@ -141,6 +159,14 @@ class RunSpec:
             parts.append(f"mrr{self.max_read_retries}")
         if self.fault_seed != 0:
             parts.append(f"fseed{self.fault_seed}")
+        if self.read_fail_rate != 0.0:
+            parts.append(f"rfail{self.read_fail_rate:g}")
+        if self.fault_wear_slope != 0.0:
+            parts.append(f"wear{self.fault_wear_slope:g}")
+        if self.parity_rebuild:
+            parts.append("parity")
+        if self.spare_blocks >= 0:
+            parts.append(f"spares{self.spare_blocks}")
         if self.gc_objective != "min_valid":
             parts.append(f"gc_{self.gc_objective}")
         return "_".join(parts)
@@ -149,13 +175,14 @@ class RunSpec:
 def expand(spec: SweepSpec) -> list[RunSpec]:
     return [
         RunSpec(spec.scenario, pol, pe, seed, r1, r2, scale, pf, ef, mrr, fs,
-                gco)
-        for pol, pe, seed, r1, r2, scale, pf, ef, mrr, fs, gco in
-        itertools.product(
+                rf, ws, pr, sb, gco)
+        for pol, pe, seed, r1, r2, scale, pf, ef, mrr, fs, rf, ws, pr, sb, gco
+        in itertools.product(
             spec.policies, spec.initial_pe, spec.seeds, spec.r1,
             spec.r2_override, spec.arrival_scale, spec.prog_fail_rate,
             spec.erase_fail_rate, spec.max_read_retries, spec.fault_seed,
-            spec.gc_objective
+            spec.read_fail_rate, spec.fault_wear_slope, spec.parity_rebuild,
+            spec.spare_blocks, spec.gc_objective
         )
     ]
 
@@ -171,7 +198,8 @@ def _run_batch(cfg: geometry.SimConfig, has_writes: bool, lpns, ops,
     """
 
     def one(lpns_i, ops_i, knobs_i, arr_i=None):
-        s0 = st.init_state(cfg, initial_pe=knobs_i.initial_pe)
+        s0 = st.init_state(cfg, initial_pe=knobs_i.initial_pe,
+                           spare_blocks=knobs_i.spare_blocks)
 
         def body(s, x):
             return engine.step_chunk(s, x, cfg, has_writes, knobs_i)
@@ -437,6 +465,24 @@ def run_sweep(spec: SweepSpec, threads: int = 4, verbose: bool = False,
                     np.asarray([r.fault_seed for r in padded], np.int32)
                     if faults_on else None
                 ),
+                read_fail_rate=(
+                    np.asarray([r.read_fail_rate for r in padded], np.float32)
+                    if faults_on else None
+                ),
+                fault_wear_slope=(
+                    np.asarray([r.fault_wear_slope for r in padded],
+                               np.float32)
+                    if faults_on else None
+                ),
+                parity_rebuild=(
+                    np.asarray([int(r.parity_rebuild) for r in padded],
+                               np.int32)
+                    if faults_on else None
+                ),
+                spare_blocks=(
+                    np.asarray([r.spare_blocks for r in padded], np.int32)
+                    if faults_on else None
+                ),
                 gc_objective=(
                     np.asarray(
                         [reclaim.GC_OBJECTIVE_CODES[r.gc_objective]
@@ -516,6 +562,10 @@ def run_sweep(spec: SweepSpec, threads: int = 4, verbose: bool = False,
                 erase_fail_rate=r.erase_fail_rate,
                 max_read_retries=r.max_read_retries,
                 fault_seed=r.fault_seed,
+                read_fail_rate=r.read_fail_rate,
+                fault_wear_slope=r.fault_wear_slope,
+                parity_rebuild=r.parity_rebuild,
+                spare_blocks=r.spare_blocks,
                 gc_objective=r.gc_objective,
                 n_requests=spec.n_requests,
                 tag=r.tag(),

@@ -62,6 +62,8 @@ class ChunkMetrics(NamedTuple):
     w_lat_hist: jnp.ndarray  # (telemetry.N_LAT_BINS,) this chunk's write latencies
     q_ms: jnp.ndarray  # total read queueing delay this chunk (0 closed-loop)
     chanq_ms: jnp.ndarray  # total read channel-wait this chunk (lattice only)
+    user_pages: jnp.ndarray  # host pages written this chunk (WAF numerator lhs)
+    reloc_pages: jnp.ndarray  # GC/conversion/reclaim pages moved this chunk
 
 
 def _queue_departures(avail0_ms, arrival_ms, occ_ms, lun, active, n_luns: int):
@@ -256,6 +258,18 @@ def write_path_batched(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig,
 
     lp = jnp.maximum(lpns, 0)
     w = is_write & (lpns >= 0)
+    if faults is not None:
+        # spare-pool exhaustion flips the device read-only (DESIGN.md §2D):
+        # real drives stop accepting host writes once retirement outruns
+        # over-provisioning. Writes in a degraded chunk are dropped whole —
+        # counted in ``n_degraded_writes``, never admitted, so no mapping
+        # entry is touched and every already-written page stays readable.
+        # With an unbounded pool (``spare_blocks < 0``) ``degraded`` is a
+        # constant False and the write set is untouched bit for bit.
+        degraded = s.spare_count <= jnp.int32(0)
+        n_degraded = (w & degraded).sum().astype(jnp.float32)
+        w = w & ~degraded
+        s = s._replace(n_degraded_writes=s.n_degraded_writes + n_degraded)
     lun = (lp % nL).astype(jnp.int32)
 
     # per-LUN write ranks via prefix sums
@@ -313,7 +327,9 @@ def write_path_batched(s: st.SSDState, lpns, is_write, cfg: geometry.SimConfig,
     # slot (programmed-but-invalid) but never maps; its data is re-placed
     # below after the scatters commit
     if faults is not None:
-        pfail = ok & flt.prog_fails(faults, slot, s.block_pe[db])
+        pfail = ok & flt.prog_fails(
+            faults, slot, s.block_pe[db], modes.PE_LIMIT[s.block_mode[db]]
+        )
     else:
         pfail = jnp.zeros_like(ok)
 
@@ -414,6 +430,9 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
     arrival = req[2] if len(req) == 3 else None
     is_read = ops == OP_READ
     fp = flt.params_for(cfg, knobs)  # None = no fault ops traced at all
+    # chunk-start write counters: the windowed WAF series is the per-chunk
+    # delta of (host pages, relocated pages), not the cumulative ratio
+    w_c0, r_c0 = s.n_writes, s.n_reloc_pages
 
     # ---------------- reads (vectorized) ----------------
     slot, blk, mode, retries, ok = lookup(s, lpns, cfg)
@@ -421,20 +440,40 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
     svc_us = jnp.where(rd, retry.read_latency_us(mode, retries), 0.0)
     if fp is not None:
         # uncorrectable reads (DESIGN.md §2D): over-budget retry estimates
-        # do not decode on-chip — burn the budget, then pay the ECC
-        # soft-decode/recovery penalty. retries collapses to the budget
-        # actually spent so the retry stats stay truthful.
+        # do not decode on-chip — burn the budget, then pay the recovery
+        # penalty (flat ECC soft-decode, or a die-parity rebuild when
+        # armed). On top of the budget path every read draws a wear-scaled
+        # probabilistic uncorrectable (``read_fail_rate``). retries
+        # collapses to the budget actually spent only for budget-overs so
+        # the retry stats stay truthful; a probabilistic uncorrectable
+        # decoded in its estimated retries before the late ECC failure.
         mrr = fp.max_read_retries
-        uncorr = rd & (mrr >= 0) & (retries > mrr)
-        retries = jnp.where(uncorr, jnp.maximum(mrr, 0), retries)
+        pe_r = s.block_pe[blk]
+        rated_r = modes.PE_LIMIT[mode]
+        over = rd & (mrr >= 0) & (retries > mrr)
+        uncorr = over | (rd & flt.read_fails(fp, slot, pe_r, rated_r))
+        retries = jnp.where(over, jnp.maximum(mrr, 0), retries)
+        rec_us = flt.recovery_us(fp, mode, cfg)
         svc_us = jnp.where(
             rd,
             retry.read_latency_us(mode, retries)
-            + jnp.where(uncorr, jnp.float32(fp.read_recovery_us), 0.0),
+            + jnp.where(uncorr, rec_us, 0.0),
             0.0,
         )
+        # per-lane rebuild mass: the recovery time of uncorrectable lanes
+        # recovered via die-parity (split out of the retry component in the
+        # obs attribution so rebuild cost is visible on its own). A
+        # single-die device has no stripe peers, so parity can never
+        # reconstruct there — recovery_us already fell back to the flat
+        # penalty and the rebuild lane must stay empty
+        if cfg.n_dies > 1:
+            is_rb = uncorr & (fp.parity_rebuild > 0)
+        else:
+            is_rb = jnp.zeros_like(uncorr)
+        rb_lane_us = jnp.where(is_rb, rec_us, 0.0)
     else:
         uncorr = None
+        rb_lane_us = jnp.zeros_like(svc_us)
     xfer_us = jnp.where(rd, cfg.transfer_us, 0.0)
     die = cfg.die_of_block(blk)
     chan = cfg.channel_of_die(die)
@@ -520,8 +559,22 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
         lat_hist=s.lat_hist + chunk_hist,
     )
     if uncorr is not None:
+        # die-parity rebuild accounting (DESIGN.md §2D): every rebuilt lane
+        # counts; a second uncorrectable among the stripe peers during the
+        # rebuild is true data loss (the sim keeps serving the stale page —
+        # no mapping entry is harmed, only the counter records it)
+        n_rb = is_rb.sum().astype(jnp.float32)
+        if cfg.n_dies > 1:
+            loss = is_rb & flt.rebuild_second_fault(
+                fp, slot, pe_r, rated_r, cfg.n_dies - 1
+            )
+            n_dl = loss.sum().astype(jnp.float32)
+        else:
+            n_dl = jnp.float32(0.0)
         s = s._replace(
-            n_uncorrectable=s.n_uncorrectable + uncorr.sum().astype(jnp.float32)
+            n_uncorrectable=s.n_uncorrectable + uncorr.sum().astype(jnp.float32),
+            n_rebuilds=s.n_rebuilds + n_rb,
+            n_data_loss=s.n_data_loss + n_dl,
         )
 
     # ---------------- observability: read-path attribution ----------------
@@ -542,11 +595,12 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
             lat_us = svc_us + xfer_us
         s = obs.record_reads(
             s, cfg, mode=mode, rd=rd, lat_us=lat_us, queue_us=q_us,
-            sense_us=base_us, retry_us=svc_us - base_us, chanw_us=cw_us,
-            xfer_us=xfer_us, retries=retries, t_ms=t_read_ms, uncorr=uncorr,
+            sense_us=base_us, retry_us=svc_us - base_us - rb_lane_us,
+            chanw_us=cw_us, xfer_us=xfer_us, retries=retries, t_ms=t_read_ms,
+            uncorr=uncorr, rebuild_us=rb_lane_us,
         )
         obs0 = (s.n_writes, s.n_conversions.sum(), s.n_erases,
-                s.n_migrated_pages)
+                s.n_migrated_pages, s.n_reloc_pages)
 
     # ---------------- heat update ----------------
     touched = rd | (ops == OP_WRITE)
@@ -569,6 +623,34 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
     # background FTL work from here on (migrations/reclaim/GC) extends the
     # die availability clocks: the next chunk's arrivals queue behind it
     busy_mark = s.die_busy_ms
+
+    # die-parity rebuild peer charges (DESIGN.md §2D): each rebuilt read
+    # senses the stripe's peer dies and moves their pages over the channel
+    # buses. The victim lane already carries the critical path in its own
+    # recorded latency (``recovery_us``); here the *peer* resources are
+    # charged on the timing lattice like any background work — a sense per
+    # peer die, a transfer per peer page on its channel — so subsequent
+    # arrivals queue behind the rebuild. With ``parity_rebuild`` off (or a
+    # one-die geometry) every charge is exactly 0.0 and the clocks are
+    # untouched bit for bit.
+    if fp is not None and cfg.n_dies > 1:
+        rb_sense_us = jnp.where(is_rb, modes.READ_LATENCY_US[mode], 0.0)
+        own_sense = jax.ops.segment_sum(rb_sense_us, die,
+                                        num_segments=cfg.n_dies)
+        rb_die_ms = (rb_sense_us.sum() - own_sense) / 1000.0
+        n_rb_chan = jax.ops.segment_sum(
+            is_rb.astype(jnp.float32), chan, num_segments=cfg.n_channels
+        )
+        rb_chan_ms = (
+            (is_rb.sum().astype(jnp.float32) * cfg.luns_per_channel - n_rb_chan)
+            * cfg.transfer_us
+        ) / 1000.0
+        s = s._replace(
+            die_busy_ms=s.die_busy_ms + rb_die_ms,
+            chan_busy_ms=s.chan_busy_ms + rb_chan_ms,
+        )
+        if arrival is not None and cfg.chan_model == "lattice":
+            chan_avail = chan_avail + rb_chan_ms
 
     # ---------------- policy: conversion migrations ----------------
     if cfg.policy != geometry.BASELINE:
@@ -661,6 +743,7 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
             conversions=s.n_conversions.sum() - obs0[1],
             erases=s.n_erases - obs0[2],
             migrated=s.n_migrated_pages - obs0[3],
+            reloc=s.n_reloc_pages - obs0[4],
         )
 
     nonfree = s.block_state != st.FREE
@@ -679,6 +762,8 @@ def step_chunk(s: st.SSDState, req, cfg: geometry.SimConfig, has_writes: bool,
         w_lat_hist=chunk_w_hist,
         q_ms=chunk_q,
         chanq_ms=chunk_chanw,
+        user_pages=s.n_writes - w_c0,
+        reloc_pages=s.n_reloc_pages - r_c0,
     )
     return s, y
 
@@ -769,6 +854,19 @@ def summarize(s: st.SSDState, cfg: geometry.SimConfig, threads: int = 4):
     tbw = modes.tbw_bytes(cap_bytes, modes.RATED_PE[modes.QLC], waf)
     host_bytes_per_day = (user_pages * cfg.page_bytes
                           / max(makespan_ms, 1e-9) * 86_400_000.0)
+    # ---- spare pool / degraded-mode accounting (DESIGN.md §2D) ----
+    pool_total = int(s.spare_total)
+    bounded = pool_total < 2**30  # st.SPARE_UNLIMITED sentinel
+    spares_total = float(pool_total) if bounded else -1.0
+    spares_remaining = float(s.spare_count) if bounded else -1.0
+    qlc_ppb = int(geometry.pages_per_block_host(cfg)[modes.QLC])
+    spare_covered_gib = (
+        min(float(s.bad_count), float(pool_total)) * qlc_ppb * cfg.page_bytes
+        / 2**30
+        if bounded
+        else float(s.bad_count) * qlc_ppb * cfg.page_bytes / 2**30
+    )
+    degraded_flag = 1.0 if bounded and int(s.spare_count) <= 0 else 0.0
     return dict(
         iops=iops,
         mean_read_latency_us=mean_lat_ms * 1000.0,
@@ -797,6 +895,18 @@ def summarize(s: st.SSDState, cfg: geometry.SimConfig, threads: int = 4):
         erase_fails=float(s.n_erase_fails),
         dropped_writes=float(s.n_dropped_writes),
         bad_blocks=float(s.bad_count),
+        # wear / rebuild / spare-pool accounting (DESIGN.md §2D): spares_*
+        # report -1.0 for an unbounded pool; ``spare_covered_gib`` is the
+        # retired capacity the over-provisioning pool backfills, so
+        # ``effective_capacity_gib`` is what the host still sees
+        rebuilds=float(s.n_rebuilds),
+        data_loss=float(s.n_data_loss),
+        degraded_writes=float(s.n_degraded_writes),
+        spares_total=spares_total,
+        spares_remaining=spares_remaining,
+        spare_covered_gib=spare_covered_gib,
+        effective_capacity_gib=cap + spare_covered_gib,
+        degraded=degraded_flag,
         # endurance / WAF (DESIGN.md §2E); waf pins to 1.0 and
         # lifetime_years to 0.0 when the run had no host writes
         user_pages=user_pages,

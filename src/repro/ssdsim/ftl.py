@@ -40,6 +40,11 @@ from repro.ssdsim import geometry, obs, state as st
 MAX_DEST = 5
 
 
+# upper bound on per-block P/E for the youngest-first composite key: the
+# die-affinity bonus must dominate any wear difference, so P/E clips here
+_ALLOC_PE_CAP = 1 << 22
+
+
 def _alloc_scan(s: st.SSDState, prefer_lun=None, cfg: geometry.SimConfig | None = None):
     """Full block_state scan (slow path): free block, prefer matching LUN."""
     free = s.block_state == st.FREE
@@ -53,6 +58,27 @@ def _alloc_scan(s: st.SSDState, prefer_lun=None, cfg: geometry.SimConfig | None 
     return jnp.where(score[idx] > 0, idx, -1)
 
 
+def _alloc_scan_youngest(s: st.SSDState, prefer_lun=None,
+                         cfg: geometry.SimConfig | None = None):
+    """Wear-levelled scan: the lowest-P/E free block, die affinity first.
+
+    Composite argmin key ``mismatch * CAP + pe`` — a die-matching block
+    always beats a mismatched one, wear breaks the tie within each class,
+    and ``argmin`` resolves equal wear to the lowest block id (the same
+    tie-break the lowest-id scan uses)."""
+    free = s.block_state == st.FREE
+    pe = jnp.clip(s.block_pe, 0, _ALLOC_PE_CAP - 1)
+    if prefer_lun is not None:
+        blk = jnp.arange(s.block_mode.shape[0], dtype=jnp.int32)
+        mismatch = (cfg.die_of_block(blk) != prefer_lun).astype(jnp.int32)
+        key = mismatch * _ALLOC_PE_CAP + pe
+    else:
+        key = pe
+    key = jnp.where(free, key, jnp.iinfo(jnp.int32).max)
+    idx = jnp.argmin(key).astype(jnp.int32)
+    return jnp.where(free[idx], idx, -1)
+
+
 def alloc_free_block(s: st.SSDState, prefer_lun=None, cfg: geometry.SimConfig | None = None):
     """Index of a free block (prefer matching LUN), or -1 if none.
 
@@ -60,7 +86,15 @@ def alloc_free_block(s: st.SSDState, prefer_lun=None, cfg: geometry.SimConfig | 
     against ``block_state`` (hints go stale when consumed) and the full scan
     runs only when it is dead. With ``prefer_lun`` only that LUN's hint is
     trusted, so LUN affinity is never worse than the scan's.
+
+    ``cfg.alloc_policy == "youngest"`` (wear-levelled allocation) always
+    takes the full scan — a hint is *a* free block on the die, not the
+    youngest one — picking the lowest-P/E free block with die affinity
+    intact. The default ``"lowest_id"`` path is untouched (pinned
+    bit-identical by tests/test_wearout.py).
     """
+    if cfg is not None and cfg.alloc_policy == "youngest":
+        return _alloc_scan_youngest(s, prefer_lun, cfg)
     hints = s.free_hint
     live = (hints >= 0) & (s.block_state[jnp.maximum(hints, 0)] == st.FREE)
     if prefer_lun is not None:
@@ -80,6 +114,31 @@ def alloc_free_block(s: st.SSDState, prefer_lun=None, cfg: geometry.SimConfig | 
 def free_block_count(s: st.SSDState):
     """Exact FREE-block count, O(1) via the incremental bookkeeping."""
     return s.free_count
+
+
+def _book_rebuilds(s: st.SSDState, faults: flt.FaultParams, uncorr, slots,
+                   pe, rated, cfg: geometry.SimConfig):
+    """Book one batch of uncorrectable reads: count them and, with parity
+    rebuild armed, the stripe reconstructions they trigger plus any
+    second-fault data loss among the peer reads (DESIGN.md §2D). Shared by
+    the background relocation readers; the engine's user read path performs
+    the same accounting inline (it additionally charges the peer dies on
+    the timing lattice)."""
+    n_unc = uncorr.sum().astype(jnp.float32)
+    on = faults.parity_rebuild > 0
+    if cfg.n_dies > 1:
+        n_rb = jnp.where(on, n_unc, 0.0)
+        loss = uncorr & on & flt.rebuild_second_fault(
+            faults, slots, pe, rated, cfg.n_dies - 1)
+        n_dl = loss.sum().astype(jnp.float32)
+    else:  # no stripe peers -> no rebuild, no loss
+        n_rb = jnp.float32(0.0)
+        n_dl = jnp.float32(0.0)
+    return s._replace(
+        n_uncorrectable=s.n_uncorrectable + n_unc,
+        n_rebuilds=s.n_rebuilds + n_rb,
+        n_data_loss=s.n_data_loss + n_dl,
+    )
 
 
 def _erase_many(s: st.SSDState, victims, grp, cfg: geometry.SimConfig,
@@ -134,7 +193,7 @@ def _erase_many(s: st.SSDState, victims, grp, cfg: geometry.SimConfig,
     if faults is not None:
         fail = grp & flt.erase_fails(
             faults, flt.block_entity(vb, cfg.n_dies, cfg.planes_per_die),
-            s.block_pe[vb],
+            s.block_pe[vb], modes.PE_LIMIT[s.block_mode[vb]],
         )
     else:
         fail = jnp.zeros_like(grp)
@@ -160,6 +219,9 @@ def _erase_many(s: st.SSDState, victims, grp, cfg: geometry.SimConfig,
         block_cold_age=s.block_cold_age.at[bdrop].set(0, mode="drop"),
         block_bad=s.block_bad.at[jnp.where(fail, vb, B)].set(True, mode="drop"),
         bad_count=s.bad_count + n_fail,
+        # each retirement consumes an over-provisioning spare until the pool
+        # runs dry (invariant: spare_count == max(total - bad, 0))
+        spare_count=jnp.maximum(s.spare_count - n_fail, 0),
         free_count=s.free_count + n_free,
         free_hint=jnp.where(hint_cand >= 0, hint_cand.astype(jnp.int32), s.free_hint),
         die_busy_ms=s.die_busy_ms + die_erase,
@@ -243,7 +305,7 @@ def _place_pages(s: st.SSDState, lpns, valid, tgt_mode, cfg: geometry.SimConfig,
     for _ in range(n_dest):
         cur = s.open_mig[tgt_mode]
         fresh = cur < 0
-        a = alloc_free_block(s)
+        a = alloc_free_block(s, cfg=cfg)
         d = jnp.where(fresh, a, cur)
         dd = jnp.maximum(d, 0)  # safe index; all writes masked when d < 0
         start = s.block_next[dd]
@@ -388,14 +450,15 @@ def migrate_pages(s: st.SSDState, lpns, tgt_mode, cfg: geometry.SimConfig,
     lat_us = retry.read_latency_us(src_mode, retries)
     if faults is not None:
         mrr = faults.max_read_retries
-        uncorr = valid & (mrr >= 0) & (retries > mrr)
+        rated = modes.PE_LIMIT[src_mode]
+        pe = s.block_pe[src_blk]
+        over = valid & (mrr >= 0) & (retries > mrr)
+        uncorr = over | (valid & flt.read_fails(faults, old_slot, pe, rated))
+        rec_us = flt.recovery_us(faults, src_mode, cfg)
         lat_us = retry.read_latency_us(
-            src_mode, jnp.where(uncorr, jnp.maximum(mrr, 0), retries)
-        ) + jnp.where(uncorr, jnp.float32(faults.read_recovery_us), 0.0)
-        s = s._replace(
-            n_uncorrectable=s.n_uncorrectable
-            + uncorr.sum().astype(jnp.float32)
-        )
+            src_mode, jnp.where(over, jnp.maximum(mrr, 0), retries)
+        ) + jnp.where(uncorr, rec_us, 0.0)
+        s = _book_rebuilds(s, faults, uncorr, old_slot, pe, rated, cfg)
     rd_ms = jnp.where(valid, lat_us, 0.0) / 1000.0
     die_rd = jax.ops.segment_sum(rd_ms, cfg.die_of_block(src_blk),
                                  num_segments=cfg.n_dies)
@@ -497,14 +560,15 @@ def relocate_group(s: st.SSDState, victims, grp, tgt_mode,
     lat_us = retry.read_latency_us(src_mode[:, None], retries)
     if faults is not None:
         mrr = faults.max_read_retries
-        uncorr = valid & (mrr >= 0) & (retries > mrr)
+        rated = modes.PE_LIMIT[src_mode][:, None]
+        pe = s.block_pe[vb][:, None]
+        over = valid & (mrr >= 0) & (retries > mrr)
+        uncorr = over | (valid & flt.read_fails(faults, slots, pe, rated))
+        rec_us = flt.recovery_us(faults, src_mode[:, None], cfg)
         lat_us = retry.read_latency_us(
-            src_mode[:, None], jnp.where(uncorr, jnp.maximum(mrr, 0), retries)
-        ) + jnp.where(uncorr, jnp.float32(faults.read_recovery_us), 0.0)
-        s = s._replace(
-            n_uncorrectable=s.n_uncorrectable
-            + uncorr.sum().astype(jnp.float32)
-        )
+            src_mode[:, None], jnp.where(over, jnp.maximum(mrr, 0), retries)
+        ) + jnp.where(uncorr, rec_us, 0.0)
+        s = _book_rebuilds(s, faults, uncorr, slots, pe, rated, cfg)
     rd_ms = jnp.where(valid, lat_us, 0.0).sum(1) / 1000.0
     rd_w = jnp.where(grp, rd_ms, 0.0)
     if cfg.chan_model == "lattice" and cfg.planes_per_lun > 1:

@@ -34,6 +34,12 @@ CHAN_MODELS = ("legacy", "lattice")
 # importable without jax; cross-checked by tests/test_endurance.py).
 GC_OBJECTIVES = ("min_valid", "lifespan")
 
+# Free-block allocation policies: "lowest_id" is the historical
+# first-free-id scan (pinned bit-identical); "youngest" steers allocation
+# toward the lowest-P/E free block (wear-levelled allocation — the other
+# half of wear levelling next to the lifespan GC victim scorer).
+ALLOC_POLICIES = ("lowest_id", "youngest")
+
 _ALIAS_WARNED: set[str] = set()
 
 BASELINE = 0  # multi-read-retry QLC, no mode awareness
@@ -86,10 +92,26 @@ class SimConfig:
     # budgets below the mode's retry-table limit (modes.MAX_RETRIES) can
     # fire, since page_retries clips at the table.
     max_read_retries: int = -1
-    read_recovery_us: float = 5000.0  # soft-decode / RAID-rebuild penalty
+    read_recovery_us: float = 5000.0  # flat ECC soft-decode penalty
     prog_fail_rate: float = 0.0  # per page program (user write path)
     erase_fail_rate: float = 0.0  # per block erase -> bad-block retirement
+    read_fail_rate: float = 0.0  # per page read -> probabilistic uncorrectable
     fault_seed: int = 0  # stream selector for the deterministic draws
+    # wear curve: every fault rate scales by 1 + slope*(pe/rated)^power,
+    # evaluated per operation from the failing block's P/E count. Slope 0.0
+    # (default) is bit-identical to the flat-rate PR 7 model.
+    fault_wear_slope: float = 0.0
+    fault_wear_power: float = 4.0
+    # uncorrectable-recovery model: False = flat read_recovery_us penalty;
+    # True = die-parity stripe rebuild (peer senses + serialized channel
+    # transfers, charged on the timing lattice) with a second-fault path
+    # counting true data loss
+    parity_rebuild: bool = False
+    # over-provisioning spare pool: erase-fail retirements consume spares
+    # before eating usable capacity; 0 remaining flips the engine into
+    # read-only degraded mode (writes dropped + counted, mapping intact).
+    # < 0 = unbounded pool (the PR 7 accounting, pinned bit-identical).
+    spare_blocks: int = -1
 
     # --- GC victim objective (DESIGN.md §2E) ---
     # "min_valid": classic fewest-valid-pages-first (the pinned default);
@@ -100,6 +122,12 @@ class SimConfig:
     gc_alpha: float = 1.0
     gc_beta: float = 0.5
     gc_gamma: float = 0.3
+
+    # --- free-block allocation policy (wear levelling) ---
+    # "lowest_id": historical first-free-id scan (pinned bit-identical);
+    # "youngest": lowest-P/E free block first (die affinity still wins,
+    # ties break to the lowest id).
+    alloc_policy: str = "lowest_id"
 
     # --- policy ---
     policy: int = RARO
@@ -121,6 +149,15 @@ class SimConfig:
             raise ValueError(
                 f"gc_objective must be one of {GC_OBJECTIVES}, "
                 f"got {self.gc_objective!r}"
+            )
+        if self.alloc_policy not in ALLOC_POLICIES:
+            raise ValueError(
+                f"alloc_policy must be one of {ALLOC_POLICIES}, "
+                f"got {self.alloc_policy!r}"
+            )
+        if self.fault_wear_power <= 0.0:
+            raise ValueError(
+                f"fault_wear_power must be > 0, got {self.fault_wear_power}"
             )
 
     @property
@@ -156,12 +193,26 @@ class SimConfig:
         itself. (The sweep runner can also activate faults per run through
         traced ``RunKnobs`` fields — see ``repro.core.faults.params_for``.)"""
         return (self.max_read_retries >= 0 or self.prog_fail_rate > 0.0
-                or self.erase_fail_rate > 0.0)
+                or self.erase_fail_rate > 0.0 or self.read_fail_rate > 0.0)
 
     @property
     def transfer_us(self) -> float:
         """Channel transfer time of one page (16 KiB @ 800 MB/s ~= 20 us)."""
         return self.page_bytes / (self.channel_mb_s * 1e6) * 1e6
+
+    @property
+    def rebuild_xfer_chain(self) -> int:
+        """Serialized peer transfers on a die-parity rebuild's critical path.
+
+        A rebuild reads the victim page's ``n_dies - 1`` stripe peers; their
+        senses overlap across dies but every peer page must cross a channel
+        bus. With multiple channels the peers split evenly across buses
+        (dies stripe across channels), so the busiest bus carries
+        ``luns_per_channel`` transfers; on a single channel all peers
+        serialize behind each other."""
+        if self.n_channels > 1:
+            return self.luns_per_channel
+        return max(self.n_dies - 1, 0)
 
     # --- lattice indexing (works on python ints and traced arrays) ---
 

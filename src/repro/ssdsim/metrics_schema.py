@@ -80,6 +80,15 @@ SCHEMA: dict[str, Metric] = {
                                                "event ring", scalar=False),
     "obs_events_total": Metric("events", "events emitted into the ring"),
     "obs_events_dropped": Metric("events", "ring overwrites (capacity overflow)"),
+    # ---- wear-correlated faults / rebuild / spare pool (DESIGN.md §2D) ----
+    "rebuilds": Metric("rebuilds", "die-parity stripe rebuilds of uncorrectable reads"),
+    "data_loss": Metric("stripes", "second fault during rebuild: unreconstructable"),
+    "degraded_writes": Metric("writes", "host writes refused in read-only degraded mode"),
+    "spares_total": Metric("blocks", "over-provisioning spare pool size (-1 = unbounded)"),
+    "spares_remaining": Metric("blocks", "spare blocks left (-1 = unbounded)"),
+    "spare_covered_gib": Metric("GiB", "retired capacity backfilled by the spare pool"),
+    "effective_capacity_gib": Metric("GiB", "usable capacity incl. spare-pool backfill"),
+    "degraded": Metric("flag", "1.0 = spare pool exhausted, device read-only"),
 }
 
 

@@ -29,7 +29,8 @@ leaves on :class:`repro.ssdsim.state.SSDState`:
    always explicit (``dropped = max(total - capacity, 0)``).
 
 3. **Windowed time series** (``obs_ts``): reads / retries / queue delay /
-   writes / conversions / erases / migrated pages bucketed by simulated-time
+   writes / conversions / erases / migrated pages / uncorrectables /
+   relocation pages (the windowed-WAF numerator) bucketed by simulated-time
    window (``cfg.obs_window_ms`` per window, ``cfg.obs_windows`` windows; the
    final window absorbs everything past the covered range, again explicit
    rather than silent). Retry storms and conversion waves show up as
@@ -64,14 +65,18 @@ LEVELS = ("off", "counters", "full")
 # latency components, in recorded-latency order: queueing delay behind the
 # die, the base sense, the extra senses bought by retries, the wait for the
 # channel bus (transfer queueing — nonzero only under the lattice model),
-# and the channel transfer service itself
+# the channel transfer service itself, and the die-parity rebuild critical
+# path of uncorrectable reads recovered via the stripe (DESIGN.md §2D; zero
+# mass unless ``parity_rebuild`` is armed)
 COMP_QUEUE = 0
 COMP_SENSE = 1
 COMP_RETRY = 2
 COMP_CHANWAIT = 3
 COMP_XFER = 4
-N_COMPONENTS = 5
-COMPONENT_NAMES = ("queue", "sense", "retry", "chan_wait", "transfer")
+COMP_REBUILD = 5
+N_COMPONENTS = 6
+COMPONENT_NAMES = ("queue", "sense", "retry", "chan_wait", "transfer",
+                   "rebuild")
 
 # event record fields (one f32 row per event; ids/counts are small integers,
 # exact in f32, which keeps the ring a single dense array — one scatter)
@@ -102,10 +107,11 @@ TS_CONVERSIONS = 4  # n_conversions increments (pages for page-granular ops)
 TS_ERASES = 5
 TS_MIGRATED = 6
 TS_UNCORR = 7  # uncorrectable reads (ECC recovery events, DESIGN.md §2D)
-N_SERIES = 8
+TS_RELOC = 8  # relocation-programmed pages (WAF numerator, DESIGN.md §2E)
+N_SERIES = 9
 SERIES_NAMES = (
     "reads", "retries", "queue_ms", "writes", "conversions", "erases",
-    "migrated_pages", "uncorrectable",
+    "migrated_pages", "uncorrectable", "reloc_pages",
 )
 
 
@@ -157,7 +163,7 @@ def _window_of(cfg: geometry.SimConfig, t_ms):
 
 def record_reads(s, cfg: geometry.SimConfig, *, mode, rd, lat_us, queue_us,
                  sense_us, retry_us, chanw_us, xfer_us, retries, t_ms,
-                 uncorr=None):
+                 uncorr=None, rebuild_us=None):
     """Per-read instruments for one chunk (engine read path).
 
     ``mode``/``lat_us``/... are per-lane arrays; ``rd`` masks user reads;
@@ -199,13 +205,16 @@ def record_reads(s, cfg: geometry.SimConfig, *, mode, rd, lat_us, queue_us,
     if not full(cfg):
         return s
     comp = s.obs_lat_comp
-    for c, v in (
+    pairs = [
         (COMP_QUEUE, queue_us),
         (COMP_SENSE, sense_us),
         (COMP_RETRY, retry_us),
         (COMP_CHANWAIT, chanw_us),
         (COMP_XFER, xfer_us),
-    ):
+    ]
+    if rebuild_us is not None:
+        pairs.append((COMP_REBUILD, rebuild_us))
+    for c, v in pairs:
         comp = comp.at[mode_drop, c, b].add(
             jnp.asarray(v, jnp.float32), mode="drop"
         )
@@ -213,19 +222,24 @@ def record_reads(s, cfg: geometry.SimConfig, *, mode, rd, lat_us, queue_us,
 
 
 def record_chunk(s, cfg: geometry.SimConfig, *, t_ms, writes, conversions,
-                 erases, migrated):
+                 erases, migrated, reloc=None):
     """Chunk-granularity series (background-FTL counter deltas): everything
-    in the chunk lands in the window of the chunk's end-of-step clock."""
+    in the chunk lands in the window of the chunk's end-of-step clock.
+    ``reloc`` (optional) feeds the relocation-pages series behind the
+    windowed WAF readout of :func:`decode_timeseries`."""
     if not enabled(cfg):
         return s
     w = _window_of(cfg, t_ms)
     ts = s.obs_ts
-    for row, v in (
+    rows = [
         (TS_WRITES, writes),
         (TS_CONVERSIONS, conversions),
         (TS_ERASES, erases),
         (TS_MIGRATED, migrated),
-    ):
+    ]
+    if reloc is not None:
+        rows.append((TS_RELOC, reloc))
+    for row, v in rows:
         ts = ts.at[w, row].add(jnp.asarray(v, jnp.float32))
     return s._replace(obs_ts=ts)
 
@@ -327,6 +341,14 @@ def decode_timeseries(s, cfg: geometry.SimConfig) -> dict:
     reads = np.maximum(out["reads"], 1.0)
     out["mean_queue_delay_us"] = out["queue_ms"] / reads * 1e3
     out["retries_per_read"] = out["retries"] / reads
+    # windowed write amplification (DESIGN.md §2E): per-window delta WAF,
+    # pinned to 1.0 in windows with no host writes (idle or read-only)
+    writes = out["writes"]
+    out["waf_window"] = np.where(
+        writes > 0,
+        (writes + out["reloc_pages"]) / np.maximum(writes, 1.0),
+        1.0,
+    )
     return out
 
 

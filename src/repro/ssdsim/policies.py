@@ -47,6 +47,15 @@ class RunKnobs(NamedTuple):
     erase_fail_rate: jnp.ndarray | None = None
     max_read_retries: jnp.ndarray | None = None
     fault_seed: jnp.ndarray | None = None
+    # wear-coupled reliability axes (ride the fault axis above; each falls
+    # back to its static SimConfig field when left None, so older callers
+    # that arm only the four PR 7 fields are unchanged). Neutral values —
+    # rate 0.0, slope 0.0, rebuild 0, spares < 0 — trace ops that reproduce
+    # the flat-rate/infinite-spare outputs bit for bit.
+    read_fail_rate: jnp.ndarray | None = None  # f32 per-read uncorrectable
+    fault_wear_slope: jnp.ndarray | None = None  # f32 wear-curve gain
+    parity_rebuild: jnp.ndarray | None = None  # i32 0/1 rebuild recovery
+    spare_blocks: jnp.ndarray | None = None  # i32; < 0 = unbounded pool
     # GC victim-objective axis (DESIGN.md §2E): int32 code per
     # ``reclaim.GC_OBJECTIVE_CODES`` (0 = min_valid, 1 = lifespan). None
     # keeps the static ``cfg.gc_objective`` formula; code 0 traces the

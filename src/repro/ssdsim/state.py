@@ -21,6 +21,11 @@ FULL = 2
 # (DESIGN.md §2D). Never FREE again, never allocated, zero capacity.
 BAD = 3
 
+# Sentinel pool size for cfg.spare_blocks < 0: an unbounded spare pool
+# (int32 max — no realizable retirement count reaches it), which keeps the
+# degraded-mode predicate traced-False and the PR 7 accounting bit-exact.
+SPARE_UNLIMITED = 2**31 - 1
+
 
 class SSDState(NamedTuple):
     # mapping
@@ -45,6 +50,14 @@ class SSDState(NamedTuple):
     # retirement accounting (exact, maintained by ftl._erase_many like
     # free_count; invariant: bad_count == (block_state == BAD).sum())
     bad_count: jnp.ndarray  # int32 scalar — retired blocks
+
+    # over-provisioning spare pool (DESIGN.md §2D): every retirement
+    # consumes one spare until the pool runs dry; an exhausted pool flips
+    # the engine into read-only degraded mode (writes dropped + counted).
+    # spare_total is a constant leaf (SPARE_UNLIMITED for the unbounded
+    # PR 7 accounting); invariant: spare_count == max(total - bad, 0).
+    spare_total: jnp.ndarray  # int32 scalar — configured pool size
+    spare_count: jnp.ndarray  # int32 scalar — spares remaining
 
     # heat (logical)
     heat: jnp.ndarray  # (L,) float32
@@ -114,9 +127,16 @@ class SSDState(NamedTuple):
     n_erase_fails: jnp.ndarray  # failed erases (block retired)
     n_dropped_writes: jnp.ndarray  # writes/re-placements lost to allocation
     #   exhaustion under retirement pressure (the stalled-queue path)
+    n_rebuilds: jnp.ndarray  # die-parity stripe reconstructions (uncorrectable
+    #   reads recovered via peers; only with parity_rebuild armed)
+    n_data_loss: jnp.ndarray  # rebuilds hit by a second uncorrectable among
+    #   the peer reads — the stripe is unreconstructable (true data loss)
+    n_degraded_writes: jnp.ndarray  # writes refused in read-only degraded
+    #   mode (spare pool exhausted; mapping untouched)
 
 
-def init_state(cfg: geometry.SimConfig, initial_pe=None) -> SSDState:
+def init_state(cfg: geometry.SimConfig, initial_pe=None,
+               spare_blocks=None) -> SSDState:
     """Pre-filled device: L logical pages written sequentially into QLC
     blocks (LUN-striped by block id), remaining blocks free. Matches the
     paper's setup: 'Initially, the block types of the hybrid SSD are set to
@@ -124,7 +144,8 @@ def init_state(cfg: geometry.SimConfig, initial_pe=None) -> SSDState:
 
     ``initial_pe`` optionally overrides ``cfg.initial_pe`` with a traced
     scalar so a batch of wear stages can share one jitted sweep (vmap over
-    the run axis — see repro.experiments.sweep).
+    the run axis — see repro.experiments.sweep); ``spare_blocks`` does the
+    same for ``cfg.spare_blocks`` (negative = unbounded pool).
     """
     B, S, L = cfg.n_blocks, cfg.n_slots, cfg.n_logical
     spb = cfg.slots_per_block
@@ -150,6 +171,12 @@ def init_state(cfg: geometry.SimConfig, initial_pe=None) -> SSDState:
     )
     free_hint = jnp.where(hint < B, hint, -1).astype(jnp.int32)
 
+    # negative = unbounded pool; works for both the static int and a traced
+    # per-run knob (the where stays shape-() either way)
+    sb = jnp.asarray(
+        cfg.spare_blocks if spare_blocks is None else spare_blocks, jnp.int32)
+    spare_total = jnp.where(sb < 0, jnp.int32(SPARE_UNLIMITED), sb)
+
     return SSDState(
         l2p=l2p,
         p2l=p2l,
@@ -163,6 +190,8 @@ def init_state(cfg: geometry.SimConfig, initial_pe=None) -> SSDState:
         block_cold_age=jnp.zeros((B,), jnp.int32),
         block_bad=jnp.zeros((B,), bool),
         bad_count=jnp.int32(0),
+        spare_total=spare_total,
+        spare_count=spare_total,
         heat=jnp.zeros((L,), jnp.float32),
         open_user=jnp.full((cfg.n_dies,), -1, jnp.int32),
         open_mig=jnp.full((3,), -1, jnp.int32),
@@ -190,6 +219,9 @@ def init_state(cfg: geometry.SimConfig, initial_pe=None) -> SSDState:
         n_prog_fails=jnp.float32(0.0),
         n_erase_fails=jnp.float32(0.0),
         n_dropped_writes=jnp.float32(0.0),
+        n_rebuilds=jnp.float32(0.0),
+        n_data_loss=jnp.float32(0.0),
+        n_degraded_writes=jnp.float32(0.0),
     )
 
 
@@ -246,6 +278,11 @@ def check_invariants(s: SSDState, cfg: geometry.SimConfig, where: str = "") -> N
         f"bad_count {int(s.bad_count)} != recount {int(bad.sum())}{tag}"
     assert (bn[bad] == 0).all() and (bv[bad] == 0).all(), \
         f"retired block with programmed/valid pages{tag}"
+    # spare-pool accounting: every retirement consumed a spare until dry
+    total, remaining = int(s.spare_total), int(s.spare_count)
+    assert total >= 0, f"negative spare_total{tag}"
+    assert remaining == max(total - int(bad.sum()), 0), \
+        f"spare_count {remaining} != max({total} - {int(bad.sum())}, 0){tag}"
     # valid slots sit inside the programmed window of their block
     assert (vslots % spb < bn[vslots // spb]).all(), \
         f"valid slot past block_next{tag}"

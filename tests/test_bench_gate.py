@@ -134,14 +134,15 @@ class TestGateMain:
         rows = doc["tiny_baseline"]["rows"]
         assert doc["tiny_baseline"]["config"]["tiny"] is True
         names = [r[0] for r in rows if r[0].endswith("/chunks_per_sec")]
-        assert len(names) == 7
+        assert len(names) == 8
         # the guarded set includes the fused-GC pressure section, the
-        # armed fault-injection path, the lattice channel model, and the
-        # lifespan GC scorer
+        # armed fault-injection path, the lattice channel model, the
+        # lifespan GC scorer, and the wear-correlated fault path
         assert "engine/gc_pressure/chunks_per_sec" in names
         assert "engine/mixed_faults/chunks_per_sec" in names
         assert "engine/channel_contention/chunks_per_sec" in names
         assert "engine/gc_lifespan/chunks_per_sec" in names
+        assert "engine/wearout/chunks_per_sec" in names
 
     def test_markdown_render(self):
         md = render_markdown(gate(_doc(), _doc()), 0.5, 0.8)

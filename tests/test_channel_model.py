@@ -355,14 +355,19 @@ class TestFaultsEntity:
             max_read_retries=jnp.int32(-1),
             prog_fail_rate=jnp.float32(0.0),
             erase_fail_rate=jnp.float32(0.5),
+            read_fail_rate=jnp.float32(0.0),
+            wear_slope=jnp.float32(0.0),
+            parity_rebuild=jnp.int32(0),
             seed=jnp.int32(3),
             read_recovery_us=5000.0,
+            wear_power=4.0,
         )
         blocks = jnp.arange(256, dtype=jnp.int32)
         pe = jnp.full((256,), 17, jnp.int32)
-        raw = np.asarray(flt.erase_fails(params, blocks, pe))
+        rated = jnp.full((256,), 3_000, jnp.int32)
+        raw = np.asarray(flt.erase_fails(params, blocks, pe, rated))
         keyed = np.asarray(flt.erase_fails(
-            params, flt.block_entity(blocks, 4, 2), pe
+            params, flt.block_entity(blocks, 4, 2), pe, rated
         ))
         np.testing.assert_array_equal(raw, keyed)
         assert raw.any() and not raw.all()  # the draw is non-trivial
